@@ -1,0 +1,96 @@
+"""Kernel microbenches.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+loop — timings are NOT hardware-representative), so each bench times the
+jnp reference path (what the dry-run rooflines measure) and reports the
+kernel's ANALYTIC VMEM working set + arithmetic intensity as the derived
+column — the numbers that matter for the TPU deployment.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash_attention():
+    B, Hq, Hkv, S, d = 1, 8, 2, 2048, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = _time(fn, q, k, v)
+    bq, bk = 128, 128
+    vmem_kib = (bq * d + 2 * bk * d + bq * bk + bq * d) * 4 / 1024
+    flops = 4 * B * Hq * S * S * d * 0.5
+    return [("kernel/flash_attention_ref", us,
+             f"vmem_tile={vmem_kib:.0f}KiB|flops={flops:.3g}")]
+
+
+def bench_flash_decode():
+    B, Hq, Hkv, S, d = 8, 8, 2, 8192, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v, S - 1))
+    us = _time(fn, q, kc, vc)
+    bytes_ = kc.size * 4 * 2
+    ai = (4 * B * Hq * S * d) / bytes_
+    return [("kernel/flash_decode_ref", us,
+             f"cache_bytes={bytes_:.3g}|arith_intensity={ai:.2f}")]
+
+
+def bench_ssd_scan():
+    B, T, H, P, N = 2, 2048, 8, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    a = -jnp.abs(jax.random.normal(ks[1], (B, T, H))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, T, N))
+    Cm = jax.random.normal(ks[3], (B, T, N))
+    fn = jax.jit(lambda *args: ref.ssd_scan_ref(*args, 64)[0])
+    us = _time(fn, x, a, Bm, Cm)
+    state_kib = H * P * N * 4 / 1024
+    return [("kernel/ssd_scan_ref", us,
+             f"state_scratch={state_kib:.0f}KiB|chunk=64")]
+
+
+def bench_gcn_fused():
+    N, F, H = 16, 36, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    A = jax.random.uniform(ks[0], (N, N))
+    X = jax.random.normal(ks[1], (N, F))
+    W = jax.random.normal(ks[2], (F, H))
+    b = jax.random.normal(ks[3], (H,))
+    fn = jax.jit(lambda *a: ref.gcn_layer_ref(*a))
+    us = _time(fn, A, X, W, b)
+    return [("kernel/gcn_fused_ref", us,
+             f"control_plane_tick_cost|N={N}")]
+
+
+def main():
+    out = []
+    out += bench_flash_attention()
+    out += bench_flash_decode()
+    out += bench_ssd_scan()
+    out += bench_gcn_fused()
+    return out
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

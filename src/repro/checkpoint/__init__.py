@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    list_checkpoints, restore_latest, save_checkpoint,
+)

@@ -1,0 +1,164 @@
+"""Auto-scaling module (paper §3.2): forecast + GPSO resource planning,
+plus the HPA and RBAS baselines from §4.2.
+
+The optimization objective is Eq.9:
+    min  Σ_i C_i·R_i + λ·max_i L_i(R)
+where R_i is the replica count on node i and L_i(R) the node's load (demand /
+provisioned capacity) under allocation R, with an unserved-demand penalty so
+the optimizer can't zero out a loaded node.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gpso import ga_only_minimize, gpso_minimize
+
+
+def eq9_fitness(R, ctx):
+    """Eq.9 population fitness: R (P, N) -> cost (P,).
+
+    ctx = (node_demand (N,), unit_capacity, replica_cost, lam, target_load) —
+    traced, so the jit'd GPSO compiles once and replans every tick without
+    retracing. Loads are measured against ``target_load`` (provisioning
+    headroom); load > 1 (true overload) draws an additional quadratic penalty.
+    """
+    demand, unit_capacity, replica_cost, lam, target = ctx
+    unit_capacity = jnp.asarray(unit_capacity)         # scalar or (N,) speeds
+    Rr = jnp.round(R)                                  # integer replicas
+    cap = Rr * unit_capacity
+    load = demand[None, :] / jnp.maximum(cap, 1e-6)
+    # unserved demand (replicas==0 but demand>0) -> strong penalty
+    unserved = jnp.maximum(demand[None, :] - cap, 0.0)
+    overload = jnp.sum(jnp.square(jnp.maximum(load - 1.0, 0.0)), axis=-1)
+    mean_unit = jnp.mean(unit_capacity)
+    return (replica_cost * jnp.sum(Rr, axis=-1)
+            + lam * jnp.max(load / target, axis=-1)
+            + 20.0 * overload
+            + 50.0 * jnp.sum(unserved, axis=-1) / mean_unit)
+
+
+@dataclasses.dataclass
+class GPSOAutoscaler:
+    """The paper's autoscaler: demand forecast -> GPSO plan (Eq.9-11).
+
+    optimizer='ga' drops the PSO refinement (the paper's implicit ablation:
+    GA-only at the same evaluation budget)."""
+    cluster_cfg: "ClusterConfig"
+    unit_capacity: float
+    seed: int = 0
+    optimizer: str = "gpso"          # "gpso" | "ga"
+
+    def __post_init__(self):
+        self._key = jax.random.PRNGKey(self.seed)
+        self._last_scale_down = -10**9
+
+    def plan(self, node_demand: np.ndarray, tick: int,
+             current: np.ndarray,
+             node_speed: Optional[np.ndarray] = None) -> np.ndarray:
+        """node_demand: (N,) forecast peak demand per node -> replicas (N,)."""
+        cfg = self.cluster_cfg
+        n = node_demand.shape[0]
+        if node_speed is None:
+            node_speed = np.ones(n, np.float32)
+        self._key, sub = jax.random.split(self._key)
+        ctx = (jnp.asarray(node_demand, jnp.float32),
+               jnp.asarray(self.unit_capacity * node_speed, jnp.float32),
+               jnp.float32(cfg.replica_cost), jnp.float32(cfg.lam),
+               jnp.float32(cfg.target_load))
+        minimize = gpso_minimize if self.optimizer == "gpso" else \
+            ga_only_minimize
+        best, cost, _ = minimize(
+            sub, eq9_fitness, node_demand.shape[0], cfg,
+            lo=float(cfg.min_replicas_per_node),
+            hi=float(cfg.max_replicas_per_node), ctx=ctx)
+        target = np.asarray(jnp.round(best), np.int32)
+        # scale-down cooldown (flap damping)
+        if (target < current).any():
+            if tick - self._last_scale_down < cfg.cooldown:
+                target = np.maximum(target, current)
+            else:
+                self._last_scale_down = tick
+        return np.clip(target, cfg.min_replicas_per_node,
+                       cfg.max_replicas_per_node)
+
+
+@dataclasses.dataclass
+class HPAAutoscaler:
+    """Kubernetes Horizontal Pod Autoscaler baseline: per-node
+    desired = ceil(current · u / u*), 10% tolerance, stabilization window for
+    scale-down (the k8s defaults, scaled to sim ticks)."""
+    cluster_cfg: "ClusterConfig"
+    target_utilization: float = 0.6
+    tolerance: float = 0.1
+    window: int = 30
+
+    def __post_init__(self):
+        self._history: list = []
+
+    def plan(self, utilization: np.ndarray, tick: int,
+             current: np.ndarray) -> np.ndarray:
+        cfg = self.cluster_cfg
+        ratio = utilization / self.target_utilization
+        desired = np.ceil(current * np.where(
+            np.abs(ratio - 1.0) > self.tolerance, ratio, 1.0)).astype(np.int32)
+        desired = np.maximum(desired, 1)
+        self._history.append(desired)
+        if len(self._history) > self.window:
+            self._history.pop(0)
+        # scale down only to the max desired over the stabilization window
+        floor = np.max(np.stack(self._history), axis=0)
+        desired = np.where(desired < current, np.minimum(floor, current),
+                           desired)
+        return np.clip(desired, cfg.min_replicas_per_node,
+                       cfg.max_replicas_per_node)
+
+
+@dataclasses.dataclass
+class RBASAutoscaler:
+    """Rule-Based Auto-Scaling baseline: threshold rules + cooldown."""
+    cluster_cfg: "ClusterConfig"
+    hi: float = 0.8
+    lo: float = 0.3
+    patience: int = 3
+    cooldown: int = 20
+
+    def __post_init__(self):
+        self._over = None
+        self._under = None
+        self._last_action = -10**9
+
+    def plan(self, utilization: np.ndarray, tick: int,
+             current: np.ndarray) -> np.ndarray:
+        cfg = self.cluster_cfg
+        n = utilization.shape[0]
+        if self._over is None:
+            self._over = np.zeros(n, np.int32)
+            self._under = np.zeros(n, np.int32)
+        self._over = np.where(utilization > self.hi, self._over + 1, 0)
+        self._under = np.where(utilization < self.lo, self._under + 1, 0)
+        target = current.copy()
+        if tick - self._last_action >= self.cooldown:
+            up = self._over >= self.patience
+            down = self._under >= self.patience
+            if up.any() or down.any():
+                target = current + up.astype(np.int32) - down.astype(np.int32)
+                self._last_action = tick
+                self._over[:] = 0
+                self._under[:] = 0
+        return np.clip(target, max(cfg.min_replicas_per_node, 1),
+                       cfg.max_replicas_per_node)
+
+
+@dataclasses.dataclass
+class StaticAllocator:
+    """No autoscaling (fixed replicas) — RRA/LCA rows in the paper's figures."""
+    replicas: int = 4
+
+    def plan(self, utilization, tick, current):
+        return np.full_like(current, self.replicas)

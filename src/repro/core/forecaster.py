@@ -1,0 +1,103 @@
+"""Demand forecasting DNN (the paper's deep-learning component of S_t).
+
+GRU over a window of recent per-node load, predicting the next-T horizon
+R̂_{t+1:t+T} (Eq. 1). Trained with MSE on trace windows; the autoscaler and
+the MADRL state both consume its predictions. A last-value baseline is
+provided for the tests' "beats-naive" check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import he_init
+
+
+def init_gru(key, in_dim: int, hidden: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wz": he_init(k1, (in_dim + hidden, hidden), jnp.float32),
+        "wr": he_init(k2, (in_dim + hidden, hidden), jnp.float32),
+        "wh": he_init(k3, (in_dim + hidden, hidden), jnp.float32),
+        "bz": jnp.zeros((hidden,)), "br": jnp.zeros((hidden,)),
+        "bh": jnp.zeros((hidden,)),
+    }
+
+
+def gru_step(p, h, x):
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    h_new = jnp.tanh(xrh @ p["wh"] + p["bh"])
+    return (1 - z) * h + z * h_new
+
+
+def init_forecaster(key, in_dim: int, hidden: int, horizon: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "gru": init_gru(k1, in_dim, hidden),
+        "head": he_init(k2, (hidden, horizon * in_dim), jnp.float32),
+        "head_b": jnp.zeros((horizon * in_dim,)),
+    }
+
+
+def forecast(params, window):
+    """window: (..., W, F) past loads -> (..., T, F) predicted horizon."""
+    lead = window.shape[:-2]
+    W, F = window.shape[-2:]
+    h0 = jnp.zeros(lead + (params["gru"]["bz"].shape[0],))
+
+    def body(h, x):
+        return gru_step(params["gru"], h, x), None
+
+    xs = jnp.moveaxis(window, -2, 0)          # (W, ..., F)
+    h, _ = jax.lax.scan(body, h0, xs)
+    out = h @ params["head"] + params["head_b"]
+    horizon = out.shape[-1] // F
+    return out.reshape(lead + (horizon, F))
+
+
+def forecast_loss(params, window, target):
+    pred = forecast(params, window)
+    return jnp.mean(jnp.square(pred - target))
+
+
+def last_value_baseline(window, horizon: int):
+    """Persistence forecast: repeat the last observation."""
+    last = window[..., -1:, :]
+    reps = [1] * (window.ndim - 2) + [horizon, 1]
+    return jnp.tile(last, reps)
+
+
+def train_forecaster(key, windows, targets, hidden: int, *, steps=500,
+                     lr=1e-2, batch=64):
+    """windows: (M, W, F); targets: (M, T, F). Returns (params, losses)."""
+    windows = jnp.asarray(windows)
+    targets = jnp.asarray(targets)
+    M, W, F = windows.shape
+    horizon = targets.shape[1]
+    params = init_forecaster(key, F, hidden, horizon)
+
+    mu = jax.tree.map(jnp.zeros_like, params)
+    nu = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, mu, nu, i, key):
+        idx = jax.random.randint(key, (batch,), 0, M)
+        loss, grads = jax.value_and_grad(forecast_loss)(
+            params, windows[idx], targets[idx])
+        mu = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, mu, grads)
+        nu = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g * g, nu, grads)
+        t = i + 1.0
+        params = jax.tree.map(
+            lambda p, m, v: p - lr * (m / (1 - 0.9 ** t))
+            / (jnp.sqrt(v / (1 - 0.999 ** t)) + 1e-8), params, mu, nu)
+        return params, mu, nu, loss
+
+    losses = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, mu, nu, loss = step(params, mu, nu, jnp.float32(i), sub)
+        losses.append(float(loss))
+    return params, losses

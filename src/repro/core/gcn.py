@@ -1,0 +1,63 @@
+"""Graph Convolutional Network over the cluster topology (paper Eq. 6).
+
+H^{l+1} = σ( D̃^{-1/2} Ã D̃^{-1/2} H^l W^l ),  Ã = A + I.
+
+The normalized adjacency is precomputed once per topology. Inputs are
+(N, F) node-feature matrices (or batched (B, N, F)). The fused Pallas kernel
+in ``repro/kernels/gcn_fused.py`` implements one layer for the serving hot
+path; this module is the reference XLA implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import he_init
+
+
+def make_topology(n: int, kind: str = "ring+hub") -> np.ndarray:
+    """Adjacency matrix (no self loops — Eq.6 adds I itself)."""
+    A = np.zeros((n, n), np.float32)
+    if kind in ("ring", "ring+hub"):
+        for i in range(n):
+            A[i, (i + 1) % n] = A[(i + 1) % n, i] = 1.0
+    if kind in ("star", "ring+hub"):
+        A[0, 1:] = A[1:, 0] = 1.0
+    if kind == "full":
+        A = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
+    return A
+
+
+def normalize_adjacency(A: np.ndarray) -> np.ndarray:
+    """D̃^{-1/2} (A+I) D̃^{-1/2}."""
+    A_t = A + np.eye(A.shape[0], dtype=A.dtype)
+    d = A_t.sum(axis=1)
+    d_inv_sqrt = 1.0 / np.sqrt(np.maximum(d, 1e-9))
+    return (A_t * d_inv_sqrt[:, None]) * d_inv_sqrt[None, :]
+
+
+def init_gcn(key, in_dim: int, hidden: int, n_layers: int,
+             out_dim: int = 0) -> dict:
+    dims = [in_dim] + [hidden] * (n_layers - 1) + [out_dim or hidden]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [he_init(k, (dims[i], dims[i + 1]), jnp.float32)
+              for i, k in enumerate(keys)],
+        "b": [jnp.zeros((dims[i + 1],), jnp.float32)
+              for i in range(len(dims) - 1)],
+    }
+
+
+def gcn_apply(params, a_hat, x, activation=jax.nn.relu,
+              final_activation=None):
+    """x: (..., N, F) -> (..., N, H). a_hat: (N, N) normalized adjacency."""
+    h = x
+    n_layers = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        h = jnp.einsum("nm,...mf->...nf", a_hat, h) @ w + b
+        if i < n_layers - 1:
+            h = activation(h)
+        elif final_activation is not None:
+            h = final_activation(h)
+    return h

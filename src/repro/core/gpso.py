@@ -1,0 +1,140 @@
+"""Hybrid Genetic-Particle-Swarm Optimization (paper §3.2, Eq. 9-11).
+
+GA phase (roulette selection, single-point crossover, random mutation)
+explores; its elite seeds the PSO phase (velocity/position updates, Eq.10-11)
+which refines toward the global optimum. Fully vectorized over the population
+in jnp, generations unrolled with ``lax.scan`` and the whole optimizer jit'd.
+
+``fitness_fn`` maps (population (P, D), ctx pytree) -> costs (P,); lower is
+better. ``ctx`` carries traced problem data (e.g. per-node demand) so the
+jit'd optimizer compiles ONCE per (fitness_fn, n_dims, cfg) and is re-invoked
+with fresh demands every scaling tick without retracing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _roulette(key, costs, n: int):
+    """Sample n indices with probability ∝ softmax(-normalized cost)."""
+    z = (costs - costs.mean()) / (costs.std() + 1e-9)
+    logits = -z
+    return jax.random.categorical(key, logits, shape=(n,))
+
+
+def ga_generation(key, pop, costs, ctx, *, crossover_p, mutation_p, elite,
+                  lo, hi, fitness_fn):
+    """One GA generation. pop: (P, D)."""
+    P, D = pop.shape
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    order = jnp.argsort(costs)
+    elites = pop[order[:elite]]
+
+    n_child = P - elite
+    pa = pop[_roulette(k1, costs, n_child)]
+    pb = pop[_roulette(k2, costs, n_child)]
+    # single-point crossover
+    cut = jax.random.randint(k3, (n_child, 1), 1, D)
+    cols = jnp.arange(D)[None, :]
+    do_cross = jax.random.uniform(k4, (n_child, 1)) < crossover_p
+    child = jnp.where((cols < cut) | ~do_cross, pa, pb)
+    # random-reset mutation
+    k5a, k5b = jax.random.split(k5)
+    mut_mask = jax.random.uniform(k5a, child.shape) < mutation_p
+    rand_vals = jax.random.uniform(k5b, child.shape, minval=lo, maxval=hi)
+    child = jnp.where(mut_mask, rand_vals, child)
+
+    new_pop = jnp.concatenate([elites, child], axis=0)
+    return new_pop, fitness_fn(new_pop, ctx)
+
+
+def pso_iteration(key, pos, vel, pbest, pbest_cost, gbest, gbest_cost, ctx, *,
+                  w, c1, c2, lo, hi, fitness_fn):
+    """Eq. 10-11."""
+    k1, k2 = jax.random.split(key)
+    r1 = jax.random.uniform(k1, pos.shape)
+    r2 = jax.random.uniform(k2, pos.shape)
+    vel = w * vel + c1 * r1 * (pbest - pos) + c2 * r2 * (gbest[None] - pos)
+    pos = jnp.clip(pos + vel, lo, hi)
+    costs = fitness_fn(pos, ctx)
+    better = costs < pbest_cost
+    pbest = jnp.where(better[:, None], pos, pbest)
+    pbest_cost = jnp.where(better, costs, pbest_cost)
+    i = jnp.argmin(pbest_cost)
+    gb_cost, gb = pbest_cost[i], pbest[i]
+    upd = gb_cost < gbest_cost
+    return pos, vel, pbest, pbest_cost, \
+        jnp.where(upd, gb, gbest), jnp.where(upd, gb_cost, gbest_cost)
+
+
+@functools.partial(jax.jit, static_argnames=("fitness_fn", "n_dims", "cfg"))
+def gpso_minimize(key, fitness_fn, n_dims: int, cfg, lo=0.0, hi=1.0,
+                  ctx=None):
+    """Hybrid GA->PSO. Returns (best_x (D,), best_cost, history (G+I,)).
+
+    cfg needs: ga_pop, ga_generations, ga_elite, ga_crossover, ga_mutation,
+    pso_iters, pso_inertia, pso_c1, pso_c2.
+    """
+    kinit, kga, kpso = jax.random.split(key, 3)
+    pop = jax.random.uniform(kinit, (cfg.ga_pop, n_dims), minval=lo, maxval=hi)
+    costs = fitness_fn(pop, ctx)
+
+    def ga_body(carry, k):
+        pop, costs = carry
+        pop, costs = ga_generation(k, pop, costs, ctx,
+                                   crossover_p=cfg.ga_crossover,
+                                   mutation_p=cfg.ga_mutation,
+                                   elite=cfg.ga_elite, lo=lo, hi=hi,
+                                   fitness_fn=fitness_fn)
+        return (pop, costs), jnp.min(costs)
+
+    (pop, costs), ga_hist = jax.lax.scan(
+        ga_body, (pop, costs), jax.random.split(kga, cfg.ga_generations))
+
+    # GA elite seeds the swarm (the paper's "high quality chromosomes ...
+    # establish the initial position of the particle swarm")
+    order = jnp.argsort(costs)
+    pos = pop[order]
+    costs = costs[order]
+    vel = jnp.zeros_like(pos)
+    pbest, pbest_cost = pos, costs
+    g_i = jnp.argmin(costs)
+    gbest, gbest_cost = pos[g_i], costs[g_i]
+
+    def pso_body(carry, k):
+        pos, vel, pb, pbc, gb, gbc = carry
+        out = pso_iteration(k, pos, vel, pb, pbc, gb, gbc, ctx,
+                            w=cfg.pso_inertia, c1=cfg.pso_c1, c2=cfg.pso_c2,
+                            lo=lo, hi=hi, fitness_fn=fitness_fn)
+        return out, out[-1]
+
+    (pos, vel, pbest, pbest_cost, gbest, gbest_cost), pso_hist = jax.lax.scan(
+        pso_body, (pos, vel, pbest, pbest_cost, gbest, gbest_cost),
+        jax.random.split(kpso, cfg.pso_iters))
+    return gbest, gbest_cost, jnp.concatenate([ga_hist, pso_hist])
+
+
+def ga_only_minimize(key, fitness_fn, n_dims: int, cfg, lo=0.0, hi=1.0,
+                     ctx=None):
+    """Ablation: GA without the PSO refinement."""
+    kinit, kga = jax.random.split(key)
+    pop = jax.random.uniform(kinit, (cfg.ga_pop, n_dims), minval=lo, maxval=hi)
+    costs = fitness_fn(pop, ctx)
+
+    def ga_body(carry, k):
+        pop, costs = carry
+        pop, costs = ga_generation(k, pop, costs, ctx,
+                                   crossover_p=cfg.ga_crossover,
+                                   mutation_p=cfg.ga_mutation,
+                                   elite=cfg.ga_elite, lo=lo, hi=hi,
+                                   fitness_fn=fitness_fn)
+        return (pop, costs), jnp.min(costs)
+
+    (pop, costs), hist = jax.lax.scan(
+        ga_body, (pop, costs),
+        jax.random.split(kga, cfg.ga_generations + cfg.pso_iters))
+    i = jnp.argmin(costs)
+    return pop[i], costs[i], hist

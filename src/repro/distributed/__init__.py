@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardPlan, batch_shardings, collective_bytes, make_shard_fn,
+    param_shardings, serve_state_shardings,
+)
+from repro.distributed.elastic import (  # noqa: F401
+    elastic_remesh, reshard_params, survivors_mesh,
+)

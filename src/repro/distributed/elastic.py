@@ -1,0 +1,50 @@
+"""Elastic scaling: rebuild the mesh and re-place state when the data-parallel
+width changes (scale-up from the autoscaler, or shrink after node failure).
+
+The TP ("model") axis is fixed by the checkpointed layout; elasticity happens
+on the data axes — exactly the knob the paper's GPSO autoscaler turns. The
+resharding is a device_put from the old sharding to the new (XLA moves only
+the shards that need to move).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import ShardPlan, param_shardings
+from repro.launch.mesh import make_mesh
+
+
+def elastic_remesh(data: int, model: int, devices=None):
+    """Build a (data, model) mesh over a device subset (shrink/grow)."""
+    devices = devices if devices is not None else jax.devices()
+    need = data * model
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices, have {len(devices)}")
+    sub = np.asarray(devices[:need]).reshape(data, model)
+    from jax.sharding import Mesh
+    return Mesh(sub, ("data", "model"))
+
+
+def reshard_params(params, new_plan: ShardPlan):
+    """Move live params onto a new mesh/plan (elastic scale event)."""
+    shardings = param_shardings(new_plan, params)
+    return jax.device_put(params, shardings)
+
+
+def survivors_mesh(mesh, failed_indices, model: int):
+    """Shrink after failures: drop the data-rows containing failed devices.
+
+    failed_indices: flat indices into mesh.devices. Returns a new mesh with
+    fewer data rows (the restart path pairs this with checkpoint restore).
+    """
+    devs = np.asarray(mesh.devices).reshape(-1, model)
+    bad_rows = set()
+    flat = list(np.asarray(mesh.devices).reshape(-1))
+    for fi in failed_indices:
+        bad_rows.add(fi // model)
+    rows = [r for r in range(devs.shape[0]) if r not in bad_rows]
+    if not rows:
+        raise ValueError("no surviving data rows")
+    from jax.sharding import Mesh
+    return Mesh(devs[rows], ("data", "model"))

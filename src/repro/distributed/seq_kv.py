@@ -1,0 +1,89 @@
+"""Sequence-sharded KV decode attention (flash-decode with LSE merge).
+
+Baseline decode shards KV HEADS over the "model" axis; with tp > kv_heads
+that forces kv replication (2x cache memory for the kv=8 archs at TP=16).
+This op shards the cache SEQUENCE over "model" instead, keeps the LOGICAL
+(unpadded) kv heads, computes per-shard partial attention, and merges with
+the flash-decode log-sum-exp trick:
+
+    m = pmax(m_i);  l = psum(l_i · e^{m_i−m});  acc = psum(acc_i · e^{m_i−m})
+
+Per-device HBM traffic drops by the replication factor AND the per-step
+collective is 3 tiny (B, H, d)-sized psums instead of a head-gather. The
+§Perf cell C iteration quantifies the delta; this op is the implementation
+(exercised by tests/test_seq_kv.py on an 8-device host mesh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _local_partial(q, k, v, pos, s_offset):
+    """Partial flash-decode over a local seq shard.
+
+    q: (B, Hq, d); k, v: (B, S_loc, KV, d); mask positions > pos.
+    Returns (m (B,Hq), l (B,Hq), acc (B,Hq,d)).
+    """
+    B, Hq, d = q.shape
+    KV = k.shape[2]
+    rep = Hq // KV
+    kr = jnp.repeat(k, rep, axis=2).astype(jnp.float32)   # (B,S,Hq,d)
+    vr = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kr) / np.sqrt(d)
+    offs = s_offset + jnp.arange(k.shape[1])
+    s = jnp.where((offs <= pos)[None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # (B,Hq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((offs <= pos)[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bht,bthd->bhd", p, vr)
+    return m, l, acc
+
+
+def seq_sharded_flash_decode(mesh, q, k_cache, v_cache, pos, *,
+                             seq_axis: str = "model",
+                             batch_axes=("data",)):
+    """q: (B, Hq, d) [batch over `batch_axes`, replicated over `seq_axis`];
+    k_cache/v_cache: (B, S, KV_logical, d) [S over `seq_axis`]; pos scalar.
+
+    Returns (B, Hq, d) attention over cache[0..pos].
+    """
+    S = k_cache.shape[1]
+    n = mesh.shape[seq_axis]
+    S_loc = S // n
+    ba = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_spec = ba if ba else None
+
+    def kernel(q, k, v, pos):
+        idx = jax.lax.axis_index(seq_axis)
+        m, l, acc = _local_partial(q, k, v, pos, idx * S_loc)
+        m_g = jax.lax.pmax(m, seq_axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axis)
+        acc_g = jax.lax.psum(acc * corr[..., None], seq_axis)
+        safe = jnp.where(l_g > 0, l_g, 1.0)
+        return (acc_g / safe[..., None]).astype(q.dtype)
+
+    return shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(b_spec, None, None),
+                  P(b_spec, seq_axis, None, None),
+                  P(b_spec, seq_axis, None, None),
+                  P()),
+        out_specs=P(b_spec, None, None),
+        check_rep=False,
+    )(q, k_cache, v_cache, jnp.asarray(pos, jnp.int32))
+
+
+def seq_kv_cache_bytes(cfg, B, S) -> int:
+    """Stored bytes with logical (unpadded) kv heads — the memory win."""
+    return 2 * cfg.num_layers * B * S * cfg.num_kv_heads * \
+        cfg.resolved_head_dim * 2

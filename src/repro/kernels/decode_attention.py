@@ -1,0 +1,107 @@
+"""Pallas TPU flash-decode: single-token GQA attention over a KV cache.
+
+The serving hot spot. Grid = (batch, kv_head, kv_block) with the kv axis
+innermost-sequential; the running online-softmax state for the group's
+q-heads lives in VMEM scratch. The current cache length ``pos`` arrives via
+scalar prefetch (SMEM) so blocks past the valid range are skipped entirely —
+decode cost is proportional to the *filled* cache, not the allocated one.
+
+Layout: q (B, G, qpg, d) grouped; caches (B, G, S, d). One program instance
+serves all q-heads of one kv group (they share the K/V stream — the GQA
+arithmetic-intensity win on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_KV = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, block_kv):
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+    pos = pos_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_kv
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (qpg, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+        m_scr[...] = m_new
+
+    pl.when(k_start <= pos)(_compute)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, block_kv=DEFAULT_BLOCK_KV,
+                 interpret=False):
+    """q: (B, Hq, d); caches: (B, Hkv, S, d); pos: scalar int32.
+
+    Returns (B, Hq, d). Attends over cache positions 0..pos inclusive.
+    """
+    B, Hq, d = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    assert Hq % Hkv == 0
+    qpg = Hq // Hkv
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0
+    qg = q.reshape(B, Hkv, qpg, d)
+    scale = 1.0 / np.sqrt(d)
+    pos_arr = jnp.asarray([pos], jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_kv=block_kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, S // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, qpg, d), lambda b, g, ki, pos: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, g, ki, pos: (b, g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, g, ki, pos: (b, g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpg, d),
+                               lambda b, g, ki, pos: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpg,), jnp.float32),
+            pltpu.VMEM((qpg,), jnp.float32),
+            pltpu.VMEM((qpg, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, qpg, d), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, d)

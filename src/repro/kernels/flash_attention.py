@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (causal GQA prefill).
+
+TPU-native design (not a CUDA port): the grid is (batch, q_head, q_block,
+kv_block) with the kv axis innermost — TPU grids execute the last axis
+sequentially per core, so the online-softmax running state (m, l, acc) lives
+in VMEM scratch that persists across kv iterations. Blocks are MXU-shaped
+(multiples of 128 on the matmul dims); K/V tiles stream HBM→VMEM one
+(block_kv, head_dim) tile at a time, so VMEM holds
+O(block_q·d + 2·block_kv·d + block_q·block_kv) regardless of sequence length.
+
+GQA is expressed in the index_map: q head h reads kv head h // q_per_group —
+no materialized KV replication.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_kv, seq_len, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=DEFAULT_BLOCK_Q,
+                    block_kv=DEFAULT_BLOCK_KV, interpret=False):
+    """q: (B, Hq, S, d); k, v: (B, Hkv, S, d) with Hq % Hkv == 0.
+
+    Returns (B, Hq, S, d).
+    """
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    qpg = Hq // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        seq_len=S, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, S // block_q, S // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, h, qi, ki: (b, h // qpg, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b, h, qi, ki: (b, h // qpg, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

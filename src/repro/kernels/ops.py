@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels with XLA fallbacks.
+
+On TPU (the deployment target) ``use_kernel=True`` dispatches the Pallas
+implementations; on this CPU container they run with ``interpret=True``
+(tests) or fall back to the jnp reference path (models / dry-run, where the
+XLA HLO is what the roofline reads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gcn_fused import gcn_layer
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel",
+                                             "interpret"))
+def attention_op(q, k, v, *, causal=True, use_kernel=None, interpret=False):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel or interpret:
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=interpret or not _on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def decode_attention_op(q, k_cache, v_cache, pos, *, use_kernel=None,
+                        interpret=False):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel or interpret:
+        return flash_decode(q, k_cache, v_cache, pos,
+                            interpret=interpret or not _on_tpu())
+    return ref.decode_attention_ref(q, k_cache, v_cache, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret"))
+def ssd_scan_op(x, a, Bm, Cm, *, chunk=64, use_kernel=None, interpret=False):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel or interpret:
+        return ssd_scan(x, a, Bm, Cm, chunk=chunk,
+                        interpret=interpret or not _on_tpu())
+    return ref.ssd_scan_ref(x, a, Bm, Cm, chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "use_kernel",
+                                             "interpret"))
+def gcn_layer_op(a_hat, x, w, b, *, relu=True, use_kernel=None,
+                 interpret=False):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel or interpret:
+        return gcn_layer(a_hat, x, w, b, relu=relu,
+                         interpret=interpret or not _on_tpu())
+    return ref.gcn_layer_ref(a_hat, x, w, b, relu=relu)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the Mamba-2 SSD blocked scan.
+
+One program instance per (batch, chunk); the chunk axis is the innermost
+(sequential) grid dimension, so the inter-chunk SSM state (H, P, N) lives in
+VMEM scratch and is carried across chunk iterations — the HBM traffic is just
+the chunk inputs/outputs (the SSD algorithm's whole point on TPU: the
+semiseparable matrix is never materialized, and the intra-chunk terms are
+MXU-shaped (Q×Q)·(Q×P) matmuls).
+
+Single B/C group (G=1), matching mamba2-1.3b / zamba2-2.7b.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_scr):
+    ci = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P) dt-preweighted
+    a = a_ref[0].astype(jnp.float32)        # (Q, H) log decays
+    bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+    state = state_scr[...]                  # (H, P, N)
+
+    a_cum = jnp.cumsum(a, axis=0)           # (Q, H)
+    Q = a.shape[0]
+    # L[q, k, h] = exp(a_cum[q] - a_cum[k]) for q >= k
+    diff = a_cum[:, None, :] - a_cum[None, :, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where((rows >= cols)[:, :, None], jnp.exp(diff), 0.0)  # (Q,Q,H)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    y_diag = jnp.einsum("qkh,qk,khp->qhp", L, scores, x)
+    y_off = jnp.einsum("qn,hpn,qh->qhp", cm, state, jnp.exp(a_cum))
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(a_cum[-1:, :] - a_cum)                     # (Q, H)
+    new_state = state * jnp.exp(a_cum[-1])[:, None, None] + \
+        jnp.einsum("kn,khp,kh->hpn", bm, x, decay_out)
+    state_scr[...] = new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0] = new_state.astype(state_out_ref.dtype)
+
+
+def ssd_scan(x, a, Bm, Cm, *, chunk=DEFAULT_CHUNK, interpret=False):
+    """x: (B, T, H, P) dt-preweighted; a: (B, T, H) log decays;
+    Bm, Cm: (B, T, N). Returns (y (B,T,H,P) f32, final state (B,H,P,N) f32).
+    """
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, T // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, ci: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, Bm, Cm)

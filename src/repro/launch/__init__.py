@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod lower+compile),
+# train.py / serve.py (end-to-end drivers). dryrun must be run as a module
+# (python -m repro.launch.dryrun) so its XLA_FLAGS line precedes jax init.

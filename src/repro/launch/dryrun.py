@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lower+compile succeeds on the
+    production mesh: 16x16 single-pod, 2x16x16 multi-pod),
+  * it fits (compiled.memory_analysis() per-device bytes),
+  * and it yields the roofline inputs (cost_analysis FLOPs/bytes + HLO
+    collective traffic; see benchmarks/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k \
+      --mesh single --out results/dryrun/cell.json
+  python -m repro.launch.dryrun --all --mesh both --jobs 4   # orchestrator
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             opts: dict = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.distributed.sharding import (ShardPlan, batch_shardings,
+                                            collective_bytes, make_shard_fn,
+                                            param_shardings,
+                                            serve_state_shardings)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import make_model, make_train_step
+    from repro.models.optim import AdamW
+
+    opts = opts or {}
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": True,
+                "reason": "long_500k needs sub-quadratic decode"}
+
+    if opts.get("mesh_spec"):
+        from repro.launch.mesh import parse_mesh_spec
+        mesh = parse_mesh_spec(opts["mesh_spec"])
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    tp = mesh.shape["model"]
+    mode = "train" if shape.kind == "train" else "serve"
+    expert_sharding = opts.get("expert_sharding", "none")
+    plan = ShardPlan(mesh, mode, expert_sharding)
+    shard_fn = make_shard_fn(plan)
+    remat = opts.get("remat", "full" if mode == "train" else "none")
+    model = make_model(cfg, tp=tp, remat=remat)
+    dtype = jnp.bfloat16
+
+    # microbatching: cap the per-device activation-checkpoint footprint
+    # (L x local_tokens/ga x d_model x 2B) at ~2.5 GiB
+    dp = (mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+          * mesh.shape.get("expert", 1))
+    local_tokens = shape.global_batch // dp * shape.seq_len
+    grad_accum = opts.get("grad_accum", 0)
+    if not grad_accum:
+        ckpt_budget = 2.5 * 2**30
+        grad_accum = 1
+        while (cfg.num_layers * (local_tokens // grad_accum) * cfg.d_model * 2
+               > ckpt_budget
+               and shape.global_batch % (grad_accum * 2) == 0
+               and shape.global_batch // (grad_accum * 2) >= dp):
+            grad_accum *= 2
+    # CE chunk: cap the (B_micro_local x chunk x V) f32 logits tile at ~0.5GiB
+    local_rows = max(shape.global_batch // dp // grad_accum, 1)
+    v_phys = model.dims.vocab
+    loss_chunk = 2048
+    while local_rows * loss_chunk * v_phys * 4 > 0.5 * 2**30 and \
+            loss_chunk > 128:
+        loss_chunk //= 2
+
+    params_s = jax.eval_shape(
+        lambda k: model.init(k, dtype), jax.random.PRNGKey(0))
+    pshard = param_shardings(plan, params_s)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        big = cfg.param_count() > 1e11
+        moment_dtype = jnp.bfloat16 if big else jnp.float32
+        accum_dtype = jnp.bfloat16 if opts.get("accum", "") == "bf16" \
+            else jnp.float32
+        opt = AdamW(lr=3e-4, moment_dtype=moment_dtype)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        oshard = {
+            "mu": param_shardings(plan, params_s),
+            "nu": param_shardings(plan, params_s),
+            "step": NamedSharding(mesh, PartitionSpec()),
+        }
+        bshard = batch_shardings(plan, specs)
+        step_fn = make_train_step(model, opt, shard_fn=shard_fn,
+                                  grad_accum=grad_accum,
+                                  loss_chunk=loss_chunk,
+                                  accum_dtype=accum_dtype)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_s, opt_s, specs)
+    elif shape.kind == "prefill":
+        bshard = batch_shardings(plan, specs)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cache_len=shape.seq_len,
+                                 shard_fn=shard_fn)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_s, specs)
+    else:  # decode
+        state_s = specs["state"]
+        sshard = serve_state_shardings(plan, state_s, cfg)
+        tshard = batch_shardings(plan, {"tokens": specs["tokens"]})["tokens"]
+        pos_shard = NamedSharding(mesh, PartitionSpec())
+
+        def decode_fn(params, state, tokens, pos):
+            return model.decode(params, state, tokens, pos,
+                                shard_fn=shard_fn)
+
+        jitted = jax.jit(decode_fn,
+                         in_shardings=(pshard, sshard, tshard, pos_shard),
+                         out_shardings=(None, sshard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_s, state_s, specs["tokens"],
+                               specs["pos"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
+        "ok": True,
+        "n_devices": n_dev, "tp": tp,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_bytes": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+        },
+        "collectives": coll,
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "pad_flops_ratio": model.dims.pad_flops_ratio,
+        },
+        "shape_info": {"seq_len": shape.seq_len,
+                       "global_batch": shape.global_batch,
+                       "kind": shape.kind},
+        "opts": dict(opts, grad_accum=grad_accum, remat=remat,
+                     loss_chunk=loss_chunk),
+    }
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+          f"(compile {t_compile:.0f}s, "
+          f"peak/device {result['memory']['peak_hbm_bytes']/2**30:.2f} GiB, "
+          f"flops/device {result['flops_per_device']:.3g})")
+    print(f"[dryrun]   memory_analysis: {mem}")
+    print(f"[dryrun]   collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in coll.items()} }")
+    return result
+
+
+def _cells(mesh_kind: str):
+    from repro.configs import ARCH_NAMES, applicable_shapes, get_config
+    meshes = ["single", "multi"] if mesh_kind == "both" else [mesh_kind]
+    for arch in ARCH_NAMES:
+        for shape in applicable_shapes(get_config(arch)):
+            for m in meshes:
+                yield arch, shape.name, m
+
+
+def orchestrate(args):
+    """Run every cell in a subprocess pool; write one JSON per cell."""
+    import itertools
+    os.makedirs(args.outdir, exist_ok=True)
+    cells = list(_cells(args.mesh))
+    if args.filter:
+        cells = [c for c in cells if args.filter in f"{c[0]}/{c[1]}/{c[2]}"]
+    running, results = [], {}
+    idx = 0
+    while idx < len(cells) or running:
+        while idx < len(cells) and len(running) < args.jobs:
+            arch, shape, mesh = cells[idx]
+            out = os.path.join(args.outdir, f"{arch}__{shape}__{mesh}.json")
+            idx += 1
+            if args.resume and os.path.exists(out):
+                print(f"[orchestrator] skip existing {out}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", out]
+            if args.expert_sharding != "none":
+                cmd += ["--expert-sharding", args.expert_sharding]
+            if args.remat:
+                cmd += ["--remat", args.remat]
+            p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                 stderr=subprocess.STDOUT, text=True)
+            running.append((p, arch, shape, mesh, out, time.time()))
+            print(f"[orchestrator] start {arch} x {shape} x {mesh} "
+                  f"({idx}/{len(cells)})")
+        time.sleep(2)
+        still = []
+        for (p, arch, shape, mesh, out, t0) in running:
+            if p.poll() is None:
+                if time.time() - t0 > args.timeout:
+                    p.kill()
+                    print(f"[orchestrator] TIMEOUT {arch} x {shape} x {mesh}")
+                    with open(out, "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "mesh": mesh, "ok": False,
+                                   "error": "timeout"}, f)
+                else:
+                    still.append((p, arch, shape, mesh, out, t0))
+                continue
+            tail = (p.stdout.read() or "")[-2000:]
+            if p.returncode != 0 and not os.path.exists(out):
+                print(f"[orchestrator] FAIL {arch} x {shape} x {mesh}:\n{tail}")
+                with open(out, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                               "ok": False, "error": tail[-1000:]}, f)
+            else:
+                print(f"[orchestrator] done {arch} x {shape} x {mesh} "
+                      f"({time.time()-t0:.0f}s)")
+        running = still
+    # summary
+    n_ok = n_skip = n_fail = 0
+    for fn in os.listdir(args.outdir):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(args.outdir, fn)) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            n_ok += 1
+        elif r.get("skipped"):
+            n_skip += 1
+        else:
+            n_fail += 1
+    print(f"[orchestrator] summary: {n_ok} ok, {n_skip} skipped, "
+          f"{n_fail} failed")
+    return n_fail
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--filter", default="")
+    ap.add_argument("--timeout", type=float, default=1800.0)
+    ap.add_argument("--expert-sharding", default="none",
+                    choices=["none", "data"])
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--accum", default="", choices=["", "bf16"])
+    ap.add_argument("--mesh-spec", default="",
+                    help="e.g. 2x8x16:data,expert,model (overrides --mesh)")
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(1 if orchestrate(args) else 0)
+
+    opts = {}
+    if args.expert_sharding != "none":
+        opts["expert_sharding"] = args.expert_sharding
+    if args.remat:
+        opts["remat"] = args.remat
+    if args.grad_accum:
+        opts["grad_accum"] = args.grad_accum
+    if args.accum:
+        opts["accum"] = args.accum
+    if args.mesh_spec:
+        opts["mesh_spec"] = args.mesh_spec
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh, opts)
+    except Exception as e:  # noqa: BLE001 — recorded as a failed cell
+        import traceback
+        result = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                  "ok": False, "error": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] FAILED: {e}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    if not result.get("ok") and not result.get("skipped"):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+``xla_force_host_platform_device_count`` trick to work.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips (DCN over 'pod')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Elastic helper: any (shape, axes) over the available devices."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    return make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """'2x8x16:data,expert,model' -> mesh. Same chip count, refactored axes
+    (e.g. a dedicated expert axis for MoE archs whose expert count does not
+    divide the data axis)."""
+    shape_s, axes_s = spec.split(":")
+    shape = tuple(int(x) for x in shape_s.split("x"))
+    axes = tuple(axes_s.split(","))
+    return make_mesh(shape, axes)

@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    Model, make_decode_step, make_model, make_prefill_step, make_train_step,
+)
+from repro.models.dims import PaddedDims, padded_dims  # noqa: F401

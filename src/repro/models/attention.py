@@ -1,0 +1,212 @@
+"""GQA attention (prefill, chunked-prefill, decode-with-cache, cross-attn).
+
+Layout is *grouped*: q is (B, S, G, qpg, hd) where G = physical kv heads and
+qpg = physical q-heads-per-group (see repro.models.dims). This keeps the TP
+sharding of q and kv heads aligned on the same mesh axis ("model") and makes
+GQA exact under kv replication.
+
+Long sequences (S >= CHUNK_THRESHOLD) use query-chunked attention via
+``lax.scan`` so the (S × S) score matrix is never materialized — each chunk
+sees the full key set, so a plain per-row softmax is exact (no online-softmax
+needed at this level; the Pallas flash kernel tiles the KV axis too).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.dims import PaddedDims, q_head_mask
+from repro.models.layers import apply_rope, he_init
+
+CHUNK_THRESHOLD = 8192
+Q_CHUNK = 1024
+NEG_INF = -1e9
+
+
+def init_attention(key, d_model: int, dims: PaddedDims, head_dim: int,
+                   qkv_bias: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    mask = q_head_mask(dims)  # zero-out padded q heads at init
+    p = {
+        "wq": he_init(ks[0], (d_model, dims.n_q, head_dim), dtype, d_model)
+              * mask[None, :, None].astype(dtype),
+        "wk": he_init(ks[1], (d_model, dims.n_kv, head_dim), dtype, d_model),
+        "wv": he_init(ks[2], (d_model, dims.n_kv, head_dim), dtype, d_model),
+        "wo": he_init(ks[3], (dims.n_q, head_dim, d_model), dtype,
+                      dims.n_q * head_dim),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_q, head_dim), dtype)
+        p["bk"] = jnp.zeros((dims.n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((dims.n_kv, head_dim), dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_x, dims: PaddedDims):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dgh->bsgh", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dgh->bsgh", kv_x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    B, S = q.shape[:2]
+    q = q.reshape(B, S, dims.n_kv, dims.q_per_group, q.shape[-1])
+    return q, k, v
+
+
+def _mask_pad_heads(ctx, dims: PaddedDims):
+    """Zero the padded q-head outputs so they are exactly inert."""
+    if all(dims.q_real):
+        return ctx
+    m = jnp.asarray(q_head_mask(dims).reshape(dims.n_kv, dims.q_per_group))
+    return ctx * m[None, None, :, :, None].astype(ctx.dtype)
+
+
+def _attend(q, k, v, q_pos, k_pos, causal: bool):
+    """q: (B,Cq,G,qpg,hd); k,v: (B,T,G,hd); positions are int32 vectors."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bsgqh,btgh->bgqst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]          # (Cq, T)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bgqst,btgh->bsgqh", probs.astype(v.dtype), v)
+    return ctx
+
+
+def _attend_maybe_chunked(q, k, v, positions, k_pos, causal):
+    """Query-chunked attention when S is long; exact either way.
+
+    Non-multiple S is zero-padded on the query axis (padded rows are computed
+    against position 0 and sliced off — keys are never padded, so real rows
+    are exact)."""
+    B, S = q.shape[:2]
+    if S < CHUNK_THRESHOLD:
+        return _attend(q, k, v, positions, k_pos, causal)
+    S_pad = ((S + Q_CHUNK - 1) // Q_CHUNK) * Q_CHUNK
+    if S_pad != S:
+        pad = S_pad - S
+        q = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * (q.ndim - 2))
+        positions = jnp.pad(positions, (0, pad))
+    n_chunks = S_pad // Q_CHUNK
+    q_chunks = q.reshape(B, n_chunks, Q_CHUNK, *q.shape[2:]).swapaxes(0, 1)
+    pos_chunks = positions.reshape(n_chunks, Q_CHUNK)
+
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        return None, _attend(qc, k, v, pc, k_pos, causal)
+
+    _, ctx = jax.lax.scan(body, None, (q_chunks, pos_chunks))
+    return ctx.swapaxes(0, 1).reshape(B, S_pad, *q.shape[2:])[:, :S]
+
+
+def attention(params, x, dims: PaddedDims, *, positions=None, rope_theta=0.0,
+              causal=True, kv_x=None, shard_fn=None):
+    """Full-sequence (training / prefill) attention. Returns (B,S,d_model)."""
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    T = kv_x.shape[1]
+    q, k, v = _project_qkv(params, x, kv_x, dims)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, k_pos, rope_theta)
+    if shard_fn is not None:
+        q, k, v = shard_fn(q, "qkv"), shard_fn(k, "kv"), shard_fn(v, "kv")
+    ctx = _attend_maybe_chunked(q, k, v, positions, k_pos, causal)
+    ctx = _mask_pad_heads(ctx, dims)
+    ctx = ctx.reshape(B, S, dims.n_q, -1)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"])
+
+
+def init_kv_cache(batch: int, max_len: int, dims: PaddedDims, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, dims.n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, dims.n_kv, head_dim), dtype),
+    }
+
+
+def prefill_attention(params, x, dims: PaddedDims, cache, *, rope_theta=0.0,
+                      shard_fn=None):
+    """Attention that also fills the KV cache for positions [0, S)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, x, dims)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1),
+    }
+    ctx = _attend_maybe_chunked(q, k, v, positions, positions, causal=True)
+    ctx = _mask_pad_heads(ctx, dims)
+    ctx = ctx.reshape(B, S, dims.n_q, -1)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"]), cache
+
+
+def project_decode_qkv(params, x, dims: PaddedDims, pos, rope_theta):
+    """Project the new token's q/k/v with RoPE at `pos` (scalar or (B,))."""
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq = pos.ndim == 1
+    q, k_new, v_new = _project_qkv(params, x, x, dims)
+    pos_vec = pos[:, None] if per_seq else jnp.full((1,), pos, jnp.int32)
+    if rope_theta:
+        q = apply_rope(q, pos_vec, rope_theta)
+        k_new = apply_rope(k_new, pos_vec, rope_theta)
+    return q, k_new, v_new
+
+
+def write_kv(k_cache, v_cache, k_new, v_new, pos):
+    """Write one token's k/v at `pos` into (B,S,G,hd) caches — in-place under
+    jit (the caches should be loop carries / donated)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        rows = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[rows, pos].set(k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, pos].set(v_new[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache
+
+
+def decode_attend(params, q, k_cache, v_cache, pos, dims: PaddedDims):
+    """Read-only attention of a single-token q over cache[0..pos]."""
+    B = q.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq = pos.ndim == 1
+    T = k_cache.shape[1]
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bsgqh,btgh->bgqst", q, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    if per_seq:
+        mask = (k_pos[None, :] <= pos[:, None])[:, None, None, None, :]
+    else:
+        mask = (k_pos <= pos)[None, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bgqst,btgh->bsgqh", probs.astype(v_cache.dtype), v_cache)
+    ctx = _mask_pad_heads(ctx, dims)
+    ctx = ctx.reshape(B, 1, dims.n_q, -1)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"])
+
+
+def decode_attention(params, x, dims: PaddedDims, cache, pos, *,
+                     rope_theta=0.0, shard_fn=None):
+    """Single-token decode. x: (B,1,d); pos scalar or (B,). Returns
+    (out, updated cache). Prefer the split project/write/attend API inside
+    scan loops (keeps cache updates in-place on the loop carry)."""
+    q, k_new, v_new = project_decode_qkv(params, x, dims, pos, rope_theta)
+    k_cache, v_cache = write_kv(cache["k"], cache["v"], k_new, v_new, pos)
+    out = decode_attend(params, q, k_cache, v_cache, pos, dims)
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,89 @@
+"""Shared layer primitives: norms, initializers, RoPE, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, heads..., head_dim) rotated by `positions`.
+
+    positions: (S,) shared across batch, or (B, S) per-sequence (continuous
+    batching). Uses the interleaved-as-halves convention (rotate_half).
+    """
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # insert the head axes (everything between S and head_dim); the count is
+    # fixed by x's rank so both (S,) and (B,S) position shapes align.
+    for _ in range(x.ndim - 3):
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int) -> np.ndarray:
+    """Whisper-style sinusoidal embeddings (n_pos, d_model)."""
+    log_timescale = np.log(10_000.0) / (d_model // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d_model // 2, dtype=np.float32))
+    scaled = np.arange(n_pos, dtype=np.float32)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1)
+
+
+def cross_entropy(logits, targets, vocab_logical: int, mask=None):
+    """Mean CE over non-masked positions; padded vocab columns are excluded.
+
+    logits: (..., V_phys) float; targets: (...) int32; mask: (...) float/bool.
+    """
+    v_phys = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_phys > vocab_logical:
+        neg = jnp.full((v_phys - vocab_logical,), -1e9, dtype=jnp.float32)
+        logits = logits.at[..., vocab_logical:].set(neg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

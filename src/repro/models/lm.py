@@ -1,0 +1,296 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Layers are stacked and applied with ``lax.scan`` (small HLO, bounded compile
+time at 40-64 layers) with configurable remat. MoE archs with
+``moe_every > 1`` scan over *layer groups* (one MoE sublayer + ``moe_every-1``
+dense sublayers per group, llama4-maverick style).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.dims import PaddedDims
+from repro.models.layers import gelu, he_init, rms_norm, silu
+from repro.models.moe import init_moe, moe_apply
+
+
+def _remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+def init_mlp(key, d_model, d_ff, activation, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": he_init(ks[0], (d_model, d_ff), dtype, d_model),
+         "w_down": he_init(ks[2], (d_ff, d_model), dtype, d_ff)}
+    if activation == "swiglu":
+        p["w_up"] = he_init(ks[1], (d_model, d_ff), dtype, d_model)
+    return p
+
+
+def mlp_apply(p, x, activation):
+    g = x @ p["w_gate"]
+    h = silu(g) * (x @ p["w_up"]) if activation == "swiglu" else gelu(g)
+    return h @ p["w_down"]
+
+
+def _init_layer(key, cfg: ArchConfig, dims: PaddedDims, dtype, is_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg.d_model, dims,
+                                    cfg.resolved_head_dim, cfg.qkv_bias, dtype),
+        "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if is_moe:
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                            cfg.num_experts, dtype, cfg.moe_shared_expert,
+                            cfg.activation)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def _stack_layers(key, cfg, dims, dtype, n, is_moe):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(k, cfg, dims, dtype, is_moe))(keys)
+
+
+def init_lm(key, cfg: ArchConfig, dims: PaddedDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": (jax.random.normal(ks[0], (dims.vocab, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(ks[1], (cfg.d_model, dims.vocab), dtype,
+                                    cfg.d_model)
+    if cfg.uses_moe and cfg.moe_every > 1:
+        n_groups = cfg.num_layers // cfg.moe_every
+        params["moe_layers"] = _stack_layers(ks[2], cfg, dims, dtype,
+                                             n_groups, True)
+        dense_keys = jax.random.split(ks[3], n_groups * (cfg.moe_every - 1))
+        dense = jax.vmap(lambda k: _init_layer(k, cfg, dims, dtype, False))(
+            dense_keys)
+        params["dense_layers"] = jax.tree.map(
+            lambda x: x.reshape(n_groups, cfg.moe_every - 1, *x.shape[1:]),
+            dense)
+    else:
+        params["layers"] = _stack_layers(ks[2], cfg, dims, dtype,
+                                         cfg.num_layers, cfg.uses_moe)
+    if cfg.family == "vlm":
+        params["patch_proj"] = he_init(ks[4], (cfg.d_model, cfg.d_model),
+                                       dtype, cfg.d_model)
+    return params
+
+
+# ------------------------------------------------------------------ sublayers
+def _attn_sublayer(lp, h, cfg, dims, positions, shard_fn):
+    y = attn.attention(lp["attn"], rms_norm(h, lp["attn_norm"], cfg.norm_eps),
+                       dims, positions=positions, rope_theta=cfg.rope_theta,
+                       causal=True, shard_fn=shard_fn)
+    return h + y
+
+
+def _ffn_sublayer(lp, h, cfg, shard_fn):
+    x = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    if "moe" in lp:
+        y, aux = moe_apply(lp["moe"], x, num_experts=cfg.num_experts,
+                           top_k=cfg.num_experts_per_tok,
+                           capacity_factor=cfg.capacity_factor,
+                           activation=cfg.activation, shard_fn=shard_fn)
+        return h + y, aux
+    return h + mlp_apply(lp["mlp"], x, cfg.activation), 0.0
+
+
+def _layer(lp, h, cfg, dims, positions, shard_fn):
+    h = _attn_sublayer(lp, h, cfg, dims, positions, shard_fn)
+    h, aux = _ffn_sublayer(lp, h, cfg, shard_fn)
+    if shard_fn is not None:
+        h = shard_fn(h, "act_btd")
+    return h, aux
+
+
+# ------------------------------------------------------------------- forward
+def _embed_inputs(params, cfg, dims, batch, dtype_ref):
+    """Token (+ optional patch) embedding. Returns (h, positions, text_start)."""
+    tok = params["embed"][batch["tokens"]]                  # (B,S,d)
+    text_start = 0
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(tok.dtype) @ params["patch_proj"]
+        tok = jnp.concatenate([patches, tok], axis=1)
+        text_start = cfg.num_patches
+    positions = jnp.arange(tok.shape[1], dtype=jnp.int32)
+    return tok, positions, text_start
+
+
+def lm_forward(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
+               remat="none", shard_fn=None, return_features=False):
+    """Full-sequence forward. Returns (logits (B,S_total,V), aux_loss) — or
+    (features (B,S_total,d), aux) with ``return_features`` (the chunked-CE
+    loss path applies the LM head itself, so the (T,V) logits tensor is never
+    materialized)."""
+    h, positions, _ = _embed_inputs(params, cfg, dims, batch, None)
+    if shard_fn is not None:
+        h = shard_fn(h, "act_btd")
+
+    def group_body(carry, lps):
+        h, aux = carry
+        if "moe_layers" in params:
+            moe_lp, dense_lp = lps
+            h, a = _layer(moe_lp, h, cfg, dims, positions, shard_fn)
+            aux += a
+            for j in range(cfg.moe_every - 1):
+                sub = jax.tree.map(lambda x: x[j], dense_lp)
+                h, _ = _layer(sub, h, cfg, dims, positions, shard_fn)
+        else:
+            h, a = _layer(lps, h, cfg, dims, positions, shard_fn)
+            aux += a
+        return (h, aux), None
+
+    body = group_body
+    pol = _remat_policy(remat)
+    if pol is not None:
+        body = jax.checkpoint(group_body, policy=pol)
+    if "moe_layers" in params:
+        xs = (params["moe_layers"], params["dense_layers"])
+    else:
+        xs = params["layers"]
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_features:
+        return h, aux
+    head = params.get("lm_head")
+    logits = h @ head if head is not None else h @ params["embed"].T
+    if shard_fn is not None:
+        logits = shard_fn(logits, "logits")
+    return logits, aux
+
+
+# ---------------------------------------------------------------- serve path
+def lm_init_cache(cfg, dims, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_layers = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    if cfg.family == "vlm":
+        max_len = max_len + cfg.num_patches
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd), dtype),
+    }
+
+
+def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
+              shard_fn=None):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 or (B,) int32
+    (cache write index, counting any VLM patch prefix).
+
+    The full stacked cache (L,B,S,G,hd) is the scan CARRY with in-place
+    single-token writes — no per-layer cache stacking copies (the caches
+    should be donated by the caller for true in-place update).
+    """
+    h = params["embed"][tokens]                              # (B,1,d)
+    me = cfg.moe_every if "moe_layers" in params else 1
+    n_groups = cfg.num_layers // me
+
+    def sublayer(h, lp, layer_idx, kc_full, vc_full):
+        x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = attn.project_decode_qkv(lp["attn"], x, dims, pos,
+                                                  cfg.rope_theta)
+        kc = jax.lax.dynamic_index_in_dim(kc_full, layer_idx, 0, False)
+        vc = jax.lax.dynamic_index_in_dim(vc_full, layer_idx, 0, False)
+        kc, vc = attn.write_kv(kc, vc, k_new, v_new, pos)
+        kc_full = jax.lax.dynamic_update_index_in_dim(kc_full, kc,
+                                                      layer_idx, 0)
+        vc_full = jax.lax.dynamic_update_index_in_dim(vc_full, vc,
+                                                      layer_idx, 0)
+        y = attn.decode_attend(lp["attn"], q, kc, vc, pos, dims)
+        h = h + y
+        h, _ = _ffn_sublayer(lp, h, cfg, shard_fn)
+        return h, kc_full, vc_full
+
+    def body(carry, xs):
+        h, kc_full, vc_full = carry
+        lps, g = xs
+        for j in range(me):
+            lp = lps if me == 1 else (
+                lps[0] if j == 0
+                else jax.tree.map(lambda x: x[j - 1], lps[1]))
+            h, kc_full, vc_full = sublayer(h, lp, g * me + j, kc_full,
+                                           vc_full)
+        return (h, kc_full, vc_full), None
+
+    if me == 1:
+        xs = (params["layers"], jnp.arange(n_groups))
+    else:
+        xs = ((params["moe_layers"], params["dense_layers"]),
+              jnp.arange(n_groups))
+    (h, new_k, new_v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]), xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = h @ head if head is not None else h @ params["embed"].T
+    return logits[:, 0], {"k": new_k, "v": new_v}
+
+
+def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
+               cache_dtype=jnp.bfloat16, shard_fn=None):
+    """Prefill: full forward + cache fill. Returns (last-token logits, cache,
+    pos). Cache is a scan carry (in-place per-layer writes)."""
+    h, positions, _ = _embed_inputs(params, cfg, dims, batch, None)
+    cache = lm_init_cache(cfg, dims, h.shape[0], cache_len, cache_dtype)
+    S = h.shape[1]
+    me = cfg.moe_every if "moe_layers" in params else 1
+    n_groups = cfg.num_layers // me
+
+    def sublayer(h, lp, layer_idx, kc_full, vc_full):
+        x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        kc = jax.lax.dynamic_index_in_dim(kc_full, layer_idx, 0, False)
+        vc = jax.lax.dynamic_index_in_dim(vc_full, layer_idx, 0, False)
+        y, filled = attn.prefill_attention(lp["attn"], x, dims,
+                                           {"k": kc, "v": vc},
+                                           rope_theta=cfg.rope_theta)
+        kc_full = jax.lax.dynamic_update_index_in_dim(kc_full, filled["k"],
+                                                      layer_idx, 0)
+        vc_full = jax.lax.dynamic_update_index_in_dim(vc_full, filled["v"],
+                                                      layer_idx, 0)
+        h = h + y
+        h, _ = _ffn_sublayer(lp, h, cfg, shard_fn)
+        if shard_fn is not None:
+            h = shard_fn(h, "act_btd")
+        return h, kc_full, vc_full
+
+    def body(carry, xs):
+        h, kc_full, vc_full = carry
+        lps, g = xs
+        for j in range(me):
+            lp = lps if me == 1 else (
+                lps[0] if j == 0
+                else jax.tree.map(lambda x: x[j - 1], lps[1]))
+            h, kc_full, vc_full = sublayer(h, lp, g * me + j, kc_full,
+                                           vc_full)
+        return (h, kc_full, vc_full), None
+
+    if me == 1:
+        xs = (params["layers"], jnp.arange(n_groups))
+    else:
+        xs = ((params["moe_layers"], params["dense_layers"]),
+              jnp.arange(n_groups))
+    (h, new_k, new_v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]), xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    last = h[:, -1]
+    logits = last @ head if head is not None else last @ params["embed"].T
+    return logits, {"k": new_k, "v": new_v}, S

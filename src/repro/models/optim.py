@@ -1,0 +1,107 @@
+"""Minimal production optimizer stack (AdamW + clipping + schedules).
+
+Self-contained (no optax dependency). Moments can be stored in bf16 for
+very large models (grok-1 / llama4-maverick) so the sharded train state fits
+HBM — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: jnp.dtype = jnp.float32
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+            if self.clip_norm else 1.0
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu1 = self.b1 * mu.astype(jnp.float32) + (1 - self.b1) * g
+            nu1 = self.b2 * nu.astype(jnp.float32) + (1 - self.b2) * g * g
+            mu_hat = mu1 / (1 - self.b1 ** step.astype(jnp.float32))
+            nu_hat = nu1 / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self._lr(step) * delta
+            return (new_p.astype(p.dtype), mu1.astype(self.moment_dtype),
+                    nu1.astype(self.moment_dtype))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, mu, nu, p)
+               for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "mu": treedef.unflatten([o[1] for o in out]),
+            "nu": treedef.unflatten([o[2] for o in out]),
+            "step": step,
+        }
+        return new_params, new_state, {"grad_norm": gnorm,
+                                       "lr": self._lr(step)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    """For the RL inner loops (DDPG actor/critic)."""
+    lr: float = 1e-3
+    momentum: float = 0.0
+
+    def init(self, params):
+        if not self.momentum:
+            return {}
+        return {"vel": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(self, grads, state, params):
+        if not self.momentum:
+            new = jax.tree.map(lambda p, g: p - self.lr * g, params, grads)
+            return new, state, {}
+        vel = jax.tree.map(lambda v, g: self.momentum * v + g,
+                           state["vel"], grads)
+        new = jax.tree.map(lambda p, v: p - self.lr * v, params, vel)
+        return new, {"vel": vel}, {}

@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked scan + O(1) decode.
+
+Implements the blocked SSD algorithm from arXiv:2405.21060 §6 as a single
+``lax.scan`` over chunks: intra-chunk attention-like term + inter-chunk state
+recurrence, so the (S × S) semiseparable matrix is never materialized and
+peak memory per step is O(chunk²·H). The Pallas kernel in
+``repro/kernels/ssd_scan.py`` fuses the intra-chunk math for TPU; this module
+is the XLA path and the oracle source of truth.
+
+Recurrence (per head h, state (P, N)):
+    s_t = exp(dt_t · A_h) · s_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · s_t + D_h · x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import he_init, rms_norm, silu, softplus
+
+
+# --------------------------------------------------------------------- params
+def init_mamba2(key, d_model: int, d_inner: int, n_heads: int, head_dim: int,
+                d_state: int, n_groups: int, conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads  # z, xBC, dt
+    conv_ch = d_inner + 2 * n_groups * d_state
+    # A in [1, 16] (mamba2 default init), dt in [1e-3, 1e-1]
+    a = np.random.RandomState(0).uniform(1.0, 16.0, (n_heads,))
+    dt = np.exp(np.random.RandomState(1).uniform(np.log(1e-3), np.log(1e-1),
+                                                 (n_heads,)))
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": he_init(ks[0], (d_model, d_in_proj), dtype, d_model),
+        "conv_w": he_init(ks[1], (conv_width, conv_ch), dtype, conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "out_proj": he_init(ks[2], (d_inner, d_model), dtype, d_inner),
+        "A_log": jnp.asarray(np.log(a), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------- core math
+def segsum_exp(a):
+    """a: (..., Q) log-decays -> L (..., Q, Q) with L[q,k]=exp(Σ_{k+1..q} a),
+    lower-triangular (incl. diagonal = 1)."""
+    a_cum = jnp.cumsum(a, axis=-1)
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    Q = a.shape[-1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Blocked SSD scan.
+
+    x:  (B, T, H, P)  inputs (already dt-unweighted)
+    dt: (B, T, H)     positive step sizes (softplus applied by caller)
+    A:  (H,)          negative decay rates
+    Bm, Cm: (B, T, G, N) with H % G == 0
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    T_orig = T
+    if T % chunk:
+        # zero-pad to a chunk multiple: padded steps have dt=0 -> decay=1 and
+        # zero input, so they are exactly inert (state passes through).
+        pad = chunk - T % chunk
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, Bm, Cm = padt(x), padt(dt), padt(Bm), padt(Cm)
+        T += pad
+    nc, rep = T // chunk, H // G
+    a = (dt * A[None, None, :]).astype(jnp.float32)        # (B,T,H) log decay
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape(Bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(xdt), to_chunks(a),
+          to_chunks(Bm.astype(jnp.float32)), to_chunks(Cm.astype(jnp.float32)))
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(state, inp):
+        xc, ac, bc, cc = inp                                # (B,Q,H,P) (B,Q,H) (B,Q,G,N)
+        a_cum = jnp.cumsum(ac, axis=1)                      # (B,Q,H)
+        L = segsum_exp(ac.transpose(0, 2, 1))               # (B,H,Q,Q)
+        bh = jnp.repeat(bc, rep, axis=2)                    # (B,Q,H,N)
+        ch = jnp.repeat(cc, rep, axis=2)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", ch, bh)      # (B,H,Q,Q)
+        y_diag = jnp.einsum("bhqk,bkhp->bqhp", L * scores, xc)
+        decay_in = jnp.exp(a_cum)                            # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", ch, state, decay_in)
+        decay_out = jnp.exp(a_cum[:, -1:, :] - a_cum)        # (B,Q,H)
+        new_state = state * jnp.exp(a_cum[:, -1])[:, :, None, None] + \
+            jnp.einsum("bkhn,bkhp,bkh->bhpn", bh, xc, decay_out)
+        return new_state, y_diag + y_off
+
+    final_state, y = jax.lax.scan(body, init_state, xs)
+    y = y.swapaxes(0, 1).reshape(Bsz, T, H, P)[:, :T_orig]
+    return y, final_state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Naive per-step recurrence oracle (for tests)."""
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    a = (dt * A[None, None, :]).astype(jnp.float32)
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    state = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+             if init_state is None else init_state)
+
+    def body(s, inp):
+        xt, at, bt, ct = inp  # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        s = s * jnp.exp(at)[:, :, None, None] + xt[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (xdt.swapaxes(0, 1), a.swapaxes(0, 1),
+          bh.swapaxes(0, 1), ch.swapaxes(0, 1))
+    state, ys = jax.lax.scan(body, state, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One token. x: (B,H,P), dt: (B,H), Bm/Cm: (B,G,N). Returns (y, state)."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp((dt * A[None, :]).astype(jnp.float32))
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    state = state * decay[:, :, None, None] + xdt[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+    return y, state
+
+
+# -------------------------------------------------------------- full block
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,T,C); w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
+                   shard_fn=None):
+    """Full-sequence Mamba-2 block. x: (B,T,d_model)."""
+    d_inner, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ params["in_proj"]                              # (B,T,din_proj)
+    z = proj[..., :d_inner]
+    xBC_raw = proj[..., d_inner:d_inner + d_inner + 2 * G * N]
+    dt_raw = proj[..., -H:]
+    xBC = silu(causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(*x.shape[:2], G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(*x.shape[:2], G, N)
+    dt = softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(*x.shape[:2], H, P)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+                           init_state=init_state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rms_norm(y * silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        W = cfg.ssm_conv_width
+        conv_tail = xBC_raw[:, -(W - 1):, :]  # raw window for decode conv state
+        if conv_tail.shape[1] < W - 1:        # prompt shorter than the window
+            conv_tail = jnp.pad(
+                conv_tail, ((0, 0), (W - 1 - conv_tail.shape[1], 0), (0, 0)))
+        return out, {"ssm": state, "conv": conv_tail}
+    return out
+
+
+def mamba2_init_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(params, x, cfg, state):
+    """One-token decode. x: (B,1,d_model); state: {'ssm','conv'}."""
+    d_inner, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x[:, 0] @ params["in_proj"]                        # (B, din_proj)
+    z = proj[..., :d_inner]
+    xBC_new = proj[..., d_inner:d_inner + d_inner + 2 * G * N]
+    dt_raw = proj[..., -H:]
+    window = jnp.concatenate([state["conv"], xBC_new[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xBC = silu(conv_out)
+    new_conv = window[:, 1:]
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(-1, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(-1, G, N)
+    dt = softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(-1, H, P)
+    y, ssm = ssd_decode_step(state["ssm"], xh, dt, A, Bm, Cm)
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(-1, d_inner).astype(x.dtype)
+    y = rms_norm(y * silu(z), params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"ssm": ssm, "conv": new_conv}

@@ -1,0 +1,226 @@
+"""Mamba-2 LM (ssm family) and Zamba-2-style hybrid (mamba backbone + shared
+attention block every ``attn_every`` layers, per-invocation KV caches).
+
+Decode is O(1) in context for the mamba layers (ssm+conv state) — these are
+the two archs that run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.dims import PaddedDims
+from repro.models.layers import he_init, rms_norm
+from repro.models.lm import init_mlp, mlp_apply, _remat_policy
+from repro.models.ssd import (init_mamba2, mamba2_decode, mamba2_forward,
+                              mamba2_init_state)
+
+
+def _n_invocations(cfg: ArchConfig) -> int:
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return 0
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def init_ssm_lm(key, cfg: ArchConfig, dims: PaddedDims, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    def layer_init(k):
+        return {
+            "norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mamba": init_mamba2(k, cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                                 cfg.ssm_head_dim, cfg.ssm_state,
+                                 cfg.ssm_groups, cfg.ssm_conv_width, dtype),
+        }
+    params = {
+        "embed": (jax.random.normal(ks[0], (dims.vocab, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "layers": jax.vmap(layer_init)(jax.random.split(ks[1], cfg.num_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = he_init(ks[2], (cfg.d_model, dims.vocab), dtype,
+                                    cfg.d_model)
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(ks[3])
+        params["shared_attn"] = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": attn.init_attention(k1, cfg.d_model, dims,
+                                        cfg.resolved_head_dim, False, dtype),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        }
+    return params
+
+
+def _shared_block(sp, h, cfg, dims, positions, shard_fn):
+    y = attn.attention(sp["attn"], rms_norm(h, sp["attn_norm"], cfg.norm_eps),
+                       dims, positions=positions, rope_theta=cfg.rope_theta,
+                       causal=True, shard_fn=shard_fn)
+    h = h + y
+    h = h + mlp_apply(sp["mlp"], rms_norm(h, sp["ffn_norm"], cfg.norm_eps),
+                      cfg.activation)
+    return h
+
+
+def ssm_forward(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
+                remat="none", shard_fn=None, return_features=False):
+    """Training forward: (logits (B,S,V), aux=0)."""
+    h = params["embed"][batch["tokens"]]
+    if shard_fn is not None:
+        h = shard_fn(h, "act_btd")
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    hybrid = cfg.family == "hybrid"
+
+    def body(carry, xs):
+        h = carry
+        lp, idx = xs
+        if hybrid:
+            h = jax.lax.cond(
+                idx % cfg.attn_every == 0,
+                lambda hh: _shared_block(params["shared_attn"], hh, cfg, dims,
+                                         positions, shard_fn),
+                lambda hh: hh, h)
+        h = h + mamba2_forward(lp["mamba"],
+                               rms_norm(h, lp["norm"], cfg.norm_eps), cfg,
+                               shard_fn=shard_fn)
+        if shard_fn is not None:
+            h = shard_fn(h, "act_btd")
+        return h, None
+
+    pol = _remat_policy(remat)
+    fn = jax.checkpoint(body, policy=pol) if pol is not None else body
+    h, _ = jax.lax.scan(fn, h, (params["layers"],
+                                jnp.arange(cfg.num_layers)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if return_features:
+        return h, jnp.float32(0.0)
+    head = params.get("lm_head")
+    logits = h @ head if head is not None else h @ params["embed"].T
+    if shard_fn is not None:
+        logits = shard_fn(logits, "logits")
+    return logits, jnp.float32(0.0)
+
+
+# ------------------------------------------------------------------ serving
+def ssm_init_state(cfg, dims, batch: int, max_len: int, dtype=jnp.bfloat16):
+    st = mamba2_init_state(batch, cfg, dtype)
+    state = {
+        "ssm": jnp.zeros((cfg.num_layers,) + st["ssm"].shape, jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers,) + st["conv"].shape, dtype),
+    }
+    if cfg.family == "hybrid":
+        n_inv = _n_invocations(cfg)
+        hd = cfg.resolved_head_dim
+        state["attn_k"] = jnp.zeros((n_inv, batch, max_len, dims.n_kv, hd), dtype)
+        state["attn_v"] = jnp.zeros((n_inv, batch, max_len, dims.n_kv, hd), dtype)
+    return state
+
+
+def _shared_block_decode(sp, h, cfg, dims, kc, vc, pos):
+    x = rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+    y, nc = attn.decode_attention(sp["attn"], x, dims, {"k": kc, "v": vc},
+                                  pos, rope_theta=cfg.rope_theta)
+    h = h + y
+    h = h + mlp_apply(sp["mlp"], rms_norm(h, sp["ffn_norm"], cfg.norm_eps),
+                      cfg.activation)
+    return h, nc["k"], nc["v"]
+
+
+def ssm_decode(params, state, tokens, pos, cfg: ArchConfig, dims: PaddedDims,
+               *, shard_fn=None):
+    """One decode step. tokens (B,1); pos scalar. Returns (logits (B,V), state)."""
+    h = params["embed"][tokens]
+    hybrid = cfg.family == "hybrid"
+    ak, av = state.get("attn_k"), state.get("attn_v")
+
+    def body(carry, xs):
+        h, ak, av = carry
+        lp, ssm_st, conv_st, idx = xs
+
+        if hybrid:
+            inv = idx // cfg.attn_every
+
+            def with_attn(args):
+                h, ak, av = args
+                kc = jax.lax.dynamic_index_in_dim(ak, inv, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(av, inv, 0, keepdims=False)
+                h, nk, nv = _shared_block_decode(params["shared_attn"], h, cfg,
+                                                 dims, kc, vc, pos)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, nk, inv, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, nv, inv, 0)
+                return h, ak, av
+
+            h, ak, av = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                     lambda a: a, (h, ak, av))
+        y, new_st = mamba2_decode(lp["mamba"],
+                                  rms_norm(h, lp["norm"], cfg.norm_eps), cfg,
+                                  {"ssm": ssm_st, "conv": conv_st})
+        h = h + y
+        return (h, ak, av), (new_st["ssm"], new_st["conv"])
+
+    (h, ak, av), (new_ssm, new_conv) = jax.lax.scan(
+        body, (h, ak, av),
+        (params["layers"], state["ssm"], state["conv"],
+         jnp.arange(cfg.num_layers)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = h @ head if head is not None else h @ params["embed"].T
+    new_state = {"ssm": new_ssm, "conv": new_conv}
+    if hybrid:
+        new_state["attn_k"], new_state["attn_v"] = ak, av
+    return logits[:, 0], new_state
+
+
+def ssm_prefill(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
+                cache_len: int, cache_dtype=jnp.bfloat16, shard_fn=None):
+    """Prefill: returns (last-token logits, serve state, pos)."""
+    h = params["embed"][batch["tokens"]]
+    B, S = h.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hybrid = cfg.family == "hybrid"
+    state = ssm_init_state(cfg, dims, B, cache_len, cache_dtype)
+    ak, av = state.get("attn_k"), state.get("attn_v")
+
+    def body(carry, xs):
+        h, ak, av = carry
+        lp, idx = xs
+        if hybrid:
+            inv = idx // cfg.attn_every
+
+            def with_attn(args):
+                h, ak, av = args
+                sp = params["shared_attn"]
+                x = rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+                kc = jax.lax.dynamic_index_in_dim(ak, inv, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(av, inv, 0, keepdims=False)
+                y, filled = attn.prefill_attention(sp["attn"], x, dims,
+                                                   {"k": kc, "v": vc},
+                                                   rope_theta=cfg.rope_theta)
+                h = h + y
+                h = h + mlp_apply(sp["mlp"],
+                                  rms_norm(h, sp["ffn_norm"], cfg.norm_eps),
+                                  cfg.activation)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, filled["k"], inv, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, filled["v"], inv, 0)
+                return h, ak, av
+
+            h, ak, av = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                     lambda a: a, (h, ak, av))
+        y, st = mamba2_forward(lp["mamba"],
+                               rms_norm(h, lp["norm"], cfg.norm_eps), cfg,
+                               return_state=True, shard_fn=shard_fn)
+        h = h + y
+        return (h, ak, av), (st["ssm"], st["conv"].astype(cache_dtype))
+
+    (h, ak, av), (ssm_states, conv_states) = jax.lax.scan(
+        body, (h, ak, av), (params["layers"], jnp.arange(cfg.num_layers)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    last = h[:, -1]
+    logits = last @ head if head is not None else last @ params["embed"].T
+    new_state = {"ssm": ssm_states, "conv": conv_states}
+    if hybrid:
+        new_state["attn_k"], new_state["attn_v"] = ak, av
+    return logits, new_state, S

@@ -1,0 +1,1 @@
+from repro.serving.engine import ClusterFrontend, ReplicaEngine, Request  # noqa: F401

@@ -1,0 +1,171 @@
+"""Request-level serving engine: continuous batching over real model forwards.
+
+``ReplicaEngine`` runs one model replica: slot-based KV/state pool, per-slot
+positions (the vector-``pos`` decode path), admit-on-free-slot, greedy
+sampling, retire-on-EOS/max-tokens. ``ClusterFrontend`` stitches several
+replicas together behind a balancer policy (the paper's RL allocation or the
+baselines) — this is the live counterpart of the fluid simulator, used by the
+integration tests and examples with reduced-config models on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    eos_id: int = -1               # -1: never stop early
+    arrival: float = 0.0
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_time is not None
+
+
+class ReplicaEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.rid = rid
+        self.cache = model.init_serve_state(max_batch, max_seq, cache_dtype)
+        self.pos = np.zeros(max_batch, np.int32)       # next cache index
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.slots: list = [None] * max_batch
+        self.queue: deque = deque()
+        self.clock = 0.0
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, st, tok, pos: model.decode(p, st, tok, pos))
+        self._prefill = jax.jit(
+            lambda p, batch: model.prefill(p, batch, cache_len=max_seq,
+                                           cache_dtype=cache_dtype))
+
+    # ----------------------------------------------------------------- load
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def load(self) -> int:
+        return self.n_active + len(self.queue)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- plumbing
+    def _insert_slot(self, slot: int, small_state, prompt_len: int,
+                     first_tok: int, req: Request):
+        def put(big, small):
+            return big.at[:, slot].set(small[:, 0])
+        self.cache = jax.tree.map(put, self.cache, small_state)
+        self.pos[slot] = prompt_len
+        self.last_tok[slot] = first_tok
+        self.slots[slot] = req
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.popleft()
+                batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+                extras = getattr(req, "extras", None)
+                if extras:
+                    batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+                logits, small, plen = self._prefill(self.params, batch)
+                tok = int(jnp.argmax(logits[0]))
+                req.output.append(tok)
+                req.first_token_time = self.clock
+                if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+                    req.finish_time = self.clock
+                    continue
+                self._insert_slot(slot, small, int(plen), tok, req)
+
+    def step(self, dt: float = 1.0) -> list:
+        """Admit + one decode step for all active slots. Returns finished."""
+        self.clock += dt
+        self._admit()
+        finished = []
+        if self.n_active == 0:
+            return finished
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        self.steps += 1
+        next_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_toks[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            if (len(req.output) >= req.max_new_tokens or tok == req.eos_id
+                    or self.pos[slot] >= self.max_seq - 1):
+                req.finish_time = self.clock
+                finished.append(req)
+                self.slots[slot] = None
+        return finished
+
+
+class ClusterFrontend:
+    """Routes requests to replicas via balancer fractions (or queue depth)."""
+
+    def __init__(self, replicas: list, policy: str = "lc",
+                 fractions_fn=None, seed: int = 0):
+        self.replicas = replicas
+        self.policy = policy
+        self.fractions_fn = fractions_fn
+        self.rng = np.random.default_rng(seed)
+        self.pending: deque = deque()
+        self.finished: list = []
+        self._rr = itertools.cycle(range(len(replicas)))
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _route(self):
+        while self.pending:
+            req = self.pending.popleft()
+            if self.policy == "rr":
+                idx = next(self._rr)
+            elif self.policy == "lc":
+                loads = [r.load for r in self.replicas]
+                idx = int(np.argmin(loads))
+            elif self.policy == "fractions":
+                fr = np.asarray(self.fractions_fn(self))
+                fr = fr / fr.sum()
+                idx = int(self.rng.choice(len(self.replicas), p=fr))
+            else:
+                raise ValueError(self.policy)
+            self.replicas[idx].submit(req)
+
+    def step(self, dt: float = 1.0):
+        self._route()
+        for r in self.replicas:
+            self.finished.extend(r.step(dt))
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            self.step()
+            if not self.pending and all(r.load == 0 for r in self.replicas):
+                return
+        raise RuntimeError("engine did not drain")

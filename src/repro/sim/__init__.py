@@ -1,0 +1,4 @@
+from repro.sim.cluster import ClusterSim, ClusterState, init_state  # noqa: F401
+from repro.sim.service_rate import (  # noqa: F401
+    replica_decode_rate, replica_request_rate,
+)

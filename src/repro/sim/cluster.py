@@ -1,0 +1,196 @@
+"""Fluid discrete-time cluster simulator for inference serving.
+
+Models N serving nodes (each holding `replicas` model replicas whose unit
+throughput comes from the arch's TPU-v5e roofline — see
+``repro.sim.service_rate``). Per tick:
+
+    arrivals --balancer fractions a_i--> per-node queues
+    served_i = min(queue_i, capacity_i·dt)
+    response_i ≈ queue_after/capacity (queueing) + 1/unit_rate (service)
+
+plus the operational realities the paper's framework must survive at scale:
+cold-start provisioning delay for new replicas, Poisson node failures with
+repair times (queued work is re-routed), and straggler nodes with degraded
+capacity. The tick update is a single jit'd function over (N,)-arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClusterState:
+    queue: np.ndarray          # (N,) outstanding work (request-units)
+    active: np.ndarray         # (N,) active replicas
+    pending: np.ndarray        # (N, D) replicas arriving in d ticks
+    up: np.ndarray             # (N,) 1 healthy / 0 failed
+    down_left: np.ndarray      # (N,) ticks of repair remaining
+    slow: np.ndarray           # (N,) straggler capacity multiplier
+    retry_pool: float          # work dropped from failed nodes, re-enqueued
+
+
+def init_state(n_nodes: int, replicas: int, delay: int) -> ClusterState:
+    return ClusterState(
+        queue=np.zeros(n_nodes, np.float32),
+        active=np.full(n_nodes, replicas, np.int32),
+        pending=np.zeros((n_nodes, delay), np.int32),
+        up=np.ones(n_nodes, np.float32),
+        down_left=np.zeros(n_nodes, np.int32),
+        slow=np.ones(n_nodes, np.float32),
+        retry_pool=0.0,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _tick_math(queue, capacity, fractions, arrivals, dt, service_time):
+    """Pure per-tick queueing update. Returns per-node metrics."""
+    arr = arrivals * dt * fractions
+    q1 = queue + arr
+    served = jnp.minimum(q1, capacity * dt)
+    q2 = q1 - served
+    util = jnp.where(capacity > 1e-9, served / jnp.maximum(capacity * dt, 1e-9),
+                     0.0)
+    # delay a marginal arrival faces: residual queue / capacity + service
+    resp = jnp.where(capacity > 1e-9, q2 / jnp.maximum(capacity, 1e-9),
+                     10.0) + service_time
+    # arrival-weighted mean response
+    w = jnp.where(jnp.sum(arr) > 1e-9, arr / jnp.maximum(jnp.sum(arr), 1e-9),
+                  jnp.ones_like(arr) / arr.shape[0])
+    mean_resp = jnp.sum(w * resp)
+    overload = jnp.mean(jnp.where(capacity * dt > 1e-9,
+                                  jnp.clip(q2 / jnp.maximum(capacity * dt, 1e-9),
+                                           0, 1), 1.0))
+    return q2, served, util, mean_resp, overload
+
+
+@dataclasses.dataclass
+class ClusterSim:
+    cfg: "ClusterConfig"
+    unit_capacity: float                  # req/s per replica (from roofline)
+    seed: int = 0
+    failures: bool = True
+
+    heterogeneous: bool = True
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.state = init_state(self.cfg.num_nodes,
+                                max(1, self.cfg.max_replicas_per_node // 2),
+                                self.cfg.provisioning_delay)
+        self.service_time = 1.0 / self.unit_capacity
+        self.tick_count = 0
+        # mixed hardware generations: persistent per-node speed multipliers
+        if self.heterogeneous:
+            self.node_speed = self.rng.choice(
+                [0.6, 1.0, 1.4], size=self.cfg.num_nodes,
+                p=[0.25, 0.5, 0.25]).astype(np.float32)
+        else:
+            self.node_speed = np.ones(self.cfg.num_nodes, np.float32)
+
+    # ------------------------------------------------------------ dynamics
+    def capacity(self) -> np.ndarray:
+        s = self.state
+        return (s.active * self.unit_capacity * self.node_speed * s.up *
+                s.slow).astype(np.float32)
+
+    def scale_to(self, target: np.ndarray):
+        """Apply an autoscaler plan: scale-ups go through the provisioning
+        pipeline (cold start); scale-downs are immediate."""
+        s = self.state
+        target = np.asarray(target, np.int32)
+        in_flight = s.active + s.pending.sum(axis=1)
+        add = np.maximum(target - in_flight, 0)
+        if add.any():
+            s.pending[:, -1] += add
+        down = np.maximum(in_flight - target, 0)
+        if down.any():
+            # remove pending first, then active
+            for i in np.nonzero(down)[0]:
+                rem = down[i]
+                for d in range(s.pending.shape[1] - 1, -1, -1):
+                    take = min(rem, s.pending[i, d])
+                    s.pending[i, d] -= take
+                    rem -= take
+                s.active[i] = max(s.active[i] - rem, 0)
+
+    def _advance_provisioning(self):
+        s = self.state
+        s.active = s.active + s.pending[:, 0]
+        s.pending = np.roll(s.pending, -1, axis=1)
+        s.pending[:, -1] = 0
+
+    def _advance_failures(self):
+        if not self.failures:
+            return
+        s, cfg = self.state, self.cfg
+        n = cfg.num_nodes
+        # recoveries
+        s.down_left = np.maximum(s.down_left - 1, 0)
+        recovered = (s.up < 0.5) & (s.down_left == 0)
+        s.up[recovered] = 1.0
+        # new failures
+        fail = (self.rng.random(n) < 1.0 / cfg.node_mtbf) & (s.up > 0.5)
+        if fail.any():
+            s.up[fail] = 0.0
+            s.down_left[fail] = self.rng.geometric(1.0 / cfg.node_mttr,
+                                                   fail.sum())
+            # failed nodes drop their queue into the retry pool
+            s.retry_pool += float(s.queue[fail].sum())
+            s.queue[fail] = 0.0
+        # stragglers
+        newly_slow = self.rng.random(n) < cfg.straggler_prob
+        s.slow = np.where(newly_slow, cfg.straggler_slowdown, 1.0).astype(
+            np.float32)
+
+    # ---------------------------------------------------------------- tick
+    def tick(self, arrivals: float, fractions: np.ndarray) -> dict:
+        """One dt step. fractions: (N,) simplex allocation from a balancer."""
+        cfg = self.cfg
+        self._advance_provisioning()
+        self._advance_failures()
+        s = self.state
+        arrivals = float(arrivals) + s.retry_pool / max(cfg.tick_seconds, 1e-9)
+        s.retry_pool = 0.0
+        cap = self.capacity()
+        q2, served, util, mean_resp, overload = _tick_math(
+            jnp.asarray(s.queue), jnp.asarray(cap), jnp.asarray(fractions),
+            jnp.float32(arrivals), jnp.float32(cfg.tick_seconds),
+            jnp.float32(self.service_time))
+        s.queue = np.array(q2)  # np.array (copy): np.asarray of a jax array
+        self.tick_count += 1    # is read-only and failure events mutate it
+        util_np = np.asarray(util)
+        return {
+            "utilization": util_np,
+            "mean_utilization": float(np.mean(util_np[s.up > 0.5])
+                                      if (s.up > 0.5).any() else 0.0),
+            "response_time": float(mean_resp),
+            "served": float(np.asarray(served).sum()),
+            "overload": float(overload),
+            "capacity": cap,
+            "queue": s.queue.copy(),
+            "up": s.up.copy(),
+            "active_replicas": s.active.copy(),
+            "replica_ticks": int(s.active.sum()),
+        }
+
+    # ------------------------------------------------------- observations
+    def observation(self, forecast: np.ndarray) -> np.ndarray:
+        """Paper Eq.1-3 state: per-node [load, utilization-proxy, capacity,
+        up] ++ forecast horizon (broadcast). (N, 4+T)."""
+        s = self.state
+        cap = self.capacity()
+        total_cap = max(cap.sum(), 1e-9)
+        load = s.queue / max(s.queue.sum(), 1.0)
+        util_proxy = np.minimum(s.queue / np.maximum(cap, 1e-9), 4.0) / 4.0
+        capn = cap / total_cap
+        f = np.broadcast_to(forecast[None, :],
+                            (self.cfg.num_nodes, forecast.shape[0]))
+        obs = np.concatenate([load[:, None], util_proxy[:, None],
+                              capn[:, None], s.up[:, None], f], axis=1)
+        return obs.astype(np.float32)

@@ -1,0 +1,60 @@
+"""Per-replica service rates derived from each arch's TPU-v5e roofline.
+
+A "replica" is one TP=16 slice of v5e serving decode. Throughput model
+(decode, batch B requests in flight):
+
+    step_time = max( compute:  2·N_active·B / (chips·peak_flops),
+                     memory:   weight_bytes/(chips·hbm_bw)
+                               + B·kv_bytes_per_token/(chips·hbm_bw) )
+    tokens/s  = B / step_time,   requests/s = tokens/s / avg_decode_len
+
+This couples the paper's cluster-level experiments to real model economics:
+a grok-1 replica is ~20x more expensive per request than granite-8b.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS_PER_REPLICA = 16
+DEFAULT_BATCH = 64
+AVG_DECODE_LEN = 128
+
+
+def kv_bytes_per_token(cfg: ArchConfig, kv_dtype_bytes: int = 2) -> float:
+    if cfg.family in ("ssm", "hybrid"):
+        # mamba state is O(1); per-token HBM traffic ~ state read/write
+        state = cfg.num_layers * cfg.ssm_heads * cfg.ssm_head_dim * \
+            cfg.ssm_state * 4
+        extra = 0.0
+        if cfg.family == "hybrid" and cfg.attn_every:
+            n_inv = (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+            extra = 2 * n_inv * cfg.num_kv_heads * cfg.resolved_head_dim * \
+                kv_dtype_bytes
+        return state / 1000.0 + extra  # state reread amortized over context
+    layers = cfg.num_layers
+    return 2 * layers * cfg.num_kv_heads * cfg.resolved_head_dim * \
+        kv_dtype_bytes
+
+
+def replica_decode_rate(cfg: ArchConfig, batch: int = DEFAULT_BATCH,
+                        context: int = 4096) -> float:
+    """Decode tokens/sec of one TP-16 replica."""
+    n_active = cfg.active_param_count()
+    weight_bytes = n_active * 2
+    flops_per_tok = 2 * n_active
+    chips = CHIPS_PER_REPLICA
+    compute_t = flops_per_tok * batch / (chips * PEAK_FLOPS)
+    kv_traffic = batch * kv_bytes_per_token(cfg) * context
+    memory_t = (weight_bytes + kv_traffic) / (chips * HBM_BW)
+    step_t = max(compute_t, memory_t)
+    return batch / step_t
+
+
+def replica_request_rate(cfg: ArchConfig, batch: int = DEFAULT_BATCH,
+                         context: int = 4096,
+                         decode_len: int = AVG_DECODE_LEN) -> float:
+    """Requests/sec of one replica (the simulator's unit_capacity)."""
+    return replica_decode_rate(cfg, batch, context) / decode_len

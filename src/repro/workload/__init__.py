@@ -1,0 +1,3 @@
+from repro.workload.trace import (  # noqa: F401
+    LOAD_LEVELS, TraceConfig, generate_trace, make_forecast_dataset,
+)

@@ -1,0 +1,213 @@
+"""Paper core: GCN, DDPG, GPSO, forecaster, balancers, autoscalers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.paper_cluster import ClusterConfig
+from repro.core import balancer as bal
+from repro.core import ddpg
+from repro.core.autoscaler import (GPSOAutoscaler, HPAAutoscaler,
+                                   RBASAutoscaler, eq9_fitness)
+from repro.core.forecaster import (forecast, init_forecaster,
+                                   last_value_baseline, train_forecaster)
+from repro.core.gcn import gcn_apply, init_gcn, make_topology, \
+    normalize_adjacency
+from repro.core.gpso import ga_only_minimize, gpso_minimize
+
+CFG = ClusterConfig(num_nodes=8)
+
+
+# ------------------------------------------------------------------- GCN
+def test_normalized_adjacency_spectrum():
+    A = make_topology(12, "ring+hub")
+    ah = normalize_adjacency(A)
+    assert np.allclose(ah, ah.T)
+    evals = np.linalg.eigvalsh(ah)
+    assert evals.max() <= 1.0 + 1e-6          # Â spectral radius ≤ 1
+
+
+def test_gcn_permutation_equivariance(key):
+    """Relabeling nodes permutes GCN outputs accordingly."""
+    n, f = 8, 5
+    A = make_topology(n, "ring")
+    ah = jnp.asarray(normalize_adjacency(A))
+    params = init_gcn(key, f, 16, 2)
+    x = jax.random.normal(key, (n, f))
+    perm = np.random.default_rng(0).permutation(n)
+    P = np.eye(n)[perm]
+    ah_p = jnp.asarray(P @ np.asarray(ah) @ P.T)
+    out = gcn_apply(params, ah, x)
+    out_p = gcn_apply(params, ah_p, x[perm])
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ DDPG
+def test_actor_outputs_simplex(key):
+    st_ = ddpg.init_ddpg(key, 6, CFG)
+    a_hat = jnp.asarray(normalize_adjacency(make_topology(8, "ring+hub")))
+    obs = jax.random.normal(key, (8, 6))
+    a = ddpg.actor_action(st_.actor, a_hat, obs)
+    assert a.shape == (8,)
+    assert float(jnp.min(a)) >= 0
+    assert float(jnp.sum(a)) == pytest.approx(1.0, abs=1e-5)
+    # failed nodes get zero traffic
+    mask = jnp.asarray([1, 1, 0, 1, 1, 0, 1, 1], jnp.float32)
+    a = ddpg.actor_action(st_.actor, a_hat, obs, up_mask=mask)
+    assert float(a[2]) < 1e-6 and float(a[5]) < 1e-6
+    assert float(jnp.sum(a)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_ddpg_update_learns_critic(key):
+    """On a fixed synthetic batch the critic loss decreases monotonically-ish."""
+    feat = 6
+    st_ = ddpg.init_ddpg(key, feat, CFG)
+    a_hat = jnp.asarray(normalize_adjacency(make_topology(8, "ring+hub")))
+    rng = np.random.default_rng(0)
+    batch = (rng.normal(size=(32, 8, feat)).astype(np.float32),
+             rng.dirichlet(np.ones(8), 32).astype(np.float32),
+             rng.normal(size=32).astype(np.float32) * 0.1,
+             rng.normal(size=(32, 8, feat)).astype(np.float32),
+             np.ones((32, 8), np.float32))
+    tup = (st_.actor, st_.critic, st_.actor_target, st_.critic_target)
+    losses = []
+    for _ in range(60):
+        tup, m = ddpg.ddpg_update(tup, a_hat, batch, gamma=0.9, tau=0.05,
+                                  actor_lr=1e-4, critic_lr=1e-2)
+        losses.append(float(m["critic_loss"]))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+def test_polyak_moves_target(key):
+    st_ = ddpg.init_ddpg(key, 4, CFG)
+    new = ddpg.polyak(st_.actor_target, jax.tree.map(lambda x: x + 1.0,
+                                                     st_.actor), 0.1)
+    for t, o in zip(jax.tree.leaves(new), jax.tree.leaves(st_.actor)):
+        np.testing.assert_allclose(np.asarray(t), np.asarray(o) * 0.9
+                                   + (np.asarray(o) + 1) * 0.1, atol=1e-6)
+
+
+# ------------------------------------------------------------------ GPSO
+def _sphere(x, ctx):
+    return jnp.sum(jnp.square(x - 0.3), axis=-1)
+
+
+def test_gpso_solves_sphere(key):
+    best, cost, hist = gpso_minimize(key, _sphere, 12, CFG, lo=0.0, hi=1.0)
+    assert float(cost) < 1e-2
+    # history non-increasing (elitism + pbest/gbest)
+    h = np.asarray(hist)
+    assert (np.diff(h) <= 1e-6).all()
+
+
+def test_gpso_beats_ga_only_on_eq9(key):
+    demand = jnp.asarray(np.random.default_rng(0).uniform(50, 300, 8),
+                         jnp.float32)
+    ctx = (demand, jnp.float32(30.0), jnp.float32(1.0), jnp.float32(32.0),
+           jnp.float32(0.7))
+    _, c_hybrid, _ = gpso_minimize(key, eq9_fitness, 8, CFG, lo=0.0, hi=8.0,
+                                   ctx=ctx)
+    _, c_ga, _ = ga_only_minimize(key, eq9_fitness, 8, CFG, lo=0.0, hi=8.0,
+                                  ctx=ctx)
+    # same total evaluation budget: hybrid should be at least as good
+    assert float(c_hybrid) <= float(c_ga) * 1.02
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_eq9_fitness_properties(seed):
+    """More replicas with same demand never increases the max-load term, and
+    unserved demand is penalized."""
+    rng = np.random.default_rng(seed)
+    demand = jnp.asarray(rng.uniform(10, 200, 6), jnp.float32)
+    ctx = (demand, jnp.float32(30.0), jnp.float32(0.0), jnp.float32(10.0),
+           jnp.float32(0.7))
+    r_small = jnp.full((1, 6), 1.0)
+    r_big = jnp.full((1, 6), 8.0)
+    assert float(eq9_fitness(r_big, ctx)[0]) <= \
+        float(eq9_fitness(r_small, ctx)[0])
+
+
+# ------------------------------------------------------------- forecaster
+def test_forecaster_beats_last_value(key):
+    t = np.arange(3000, dtype=np.float32)
+    sig = 1.0 + 0.5 * np.sin(2 * np.pi * t / 100)
+    sig += np.random.default_rng(0).normal(0, 0.02, 3000).astype(np.float32)
+    W, H = 32, 8
+    xs = np.stack([sig[i:i + W, None] for i in range(2500)])
+    ys = np.stack([sig[i + W:i + W + H, None] for i in range(2500)])
+    params, losses = train_forecaster(key, xs, ys, 32, steps=400, lr=5e-3)
+    pred = forecast(params, jnp.asarray(xs[-200:]))
+    naive = last_value_baseline(jnp.asarray(xs[-200:]), H)
+    mse_nn = float(jnp.mean(jnp.square(pred - ys[-200:])))
+    mse_naive = float(jnp.mean(jnp.square(naive - ys[-200:])))
+    assert mse_nn < 0.6 * mse_naive, (mse_nn, mse_naive)
+
+
+# -------------------------------------------------------------- balancers
+@given(seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_least_connections_waterfills(seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.uniform(0, 10, 8), jnp.float32)
+    up = jnp.ones(8)
+    total = float(rng.uniform(1, 50))
+    fr = bal.least_connections(q, up, total)
+    assert float(jnp.sum(fr)) == pytest.approx(1.0, abs=1e-4)
+    assert float(jnp.min(fr)) >= -1e-6
+    # post-routing queues of receiving nodes equalize at the water level
+    post = np.asarray(q) + np.asarray(fr) * total
+    recv = np.asarray(fr) > 1e-6
+    if recv.any():
+        lvl = post[recv]
+        assert lvl.max() - lvl.min() < 1e-3
+        # non-receiving nodes were already above the level
+        if (~recv).any():
+            assert post[~recv].min() >= lvl.max() - 1e-3
+
+
+def test_round_robin_uniform_over_up():
+    up = jnp.asarray([1, 0, 1, 1], jnp.float32)
+    fr = bal.round_robin(None, up)
+    np.testing.assert_allclose(np.asarray(fr), [1 / 3, 0, 1 / 3, 1 / 3],
+                               atol=1e-6)
+
+
+# ------------------------------------------------------------- autoscalers
+def test_hpa_scales_up_on_high_util():
+    h = HPAAutoscaler(CFG, target_utilization=0.6)
+    cur = np.full(8, 2, np.int32)
+    tgt = h.plan(np.full(8, 0.95, np.float32), 0, cur)
+    assert (tgt > cur).all()
+
+
+def test_hpa_stabilization_window_prevents_flapping():
+    h = HPAAutoscaler(CFG, target_utilization=0.6, window=10)
+    cur = np.full(8, 4, np.int32)
+    h.plan(np.full(8, 0.9, np.float32), 0, cur)     # wants 6
+    tgt = h.plan(np.full(8, 0.1, np.float32), 1, cur)  # wants 1, but window
+    assert (tgt >= cur).all()
+
+
+def test_rbas_patience_and_cooldown():
+    r = RBASAutoscaler(CFG, patience=2, cooldown=5)
+    cur = np.full(4, 4, np.int32)
+    assert (r.plan(np.full(4, 0.9, np.float32), 0, cur) == cur).all()
+    t1 = r.plan(np.full(4, 0.9, np.float32), 1, cur)
+    assert (t1 == cur + 1).all()
+    # cooldown blocks immediate re-scale
+    for t in range(2, 5):
+        assert (r.plan(np.full(4, 0.9, np.float32), t, cur) == cur).all()
+
+
+def test_gpso_autoscaler_serves_demand():
+    sc = GPSOAutoscaler(CFG, unit_capacity=30.0, seed=0)
+    demand = np.full(8, 100.0, np.float32)
+    plan = sc.plan(demand, tick=100, current=np.full(8, 1, np.int32))
+    cap = plan * 30.0
+    assert (cap >= demand).all()                    # no overload
+    assert plan.sum() <= 8 * CFG.max_replicas_per_node

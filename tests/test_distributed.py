@@ -1,0 +1,180 @@
+"""Distributed runtime: sharding rules, HLO collective accounting, elastic
+remesh, and a small-mesh dry-run in a subprocess (8 host devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import collective_bytes
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_bytes_parser():
+    hlo = textwrap.dedent("""
+      %ag = bf16[16,1024]{1,0} all-gather(bf16[2,1024]{1,0} %x), dims={0}
+      %ar.1 = f32[512]{0} all-reduce(f32[512]{0} %y), to_apply=%add
+      %rs = f32[64,8]{1,0} reduce-scatter(f32[512,8]{1,0} %z), dims={0}
+      %cp = u32[4]{0} collective-permute(u32[4]{0} %w)
+      %fusion.all-reduce-like = f32[9]{0} fusion(f32[9]{0} %v)
+      %ard = (f32[8]{0}, f32[8]{0}) all-reduce-start(f32[8]{0} %q)
+    """)
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 512 * 4 * 2 + 2 * 8 * 4 * 2  # 2x ring factor
+    assert out["reduce-scatter"] == 64 * 8 * 4
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+_SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.distributed.sharding import (ShardPlan, batch_shardings,
+                                        make_shard_fn, param_shardings,
+                                        serve_state_shardings)
+from repro.launch.mesh import make_mesh
+from repro.models.model import make_model, make_train_step
+from repro.models.optim import AdamW
+
+cfg = get_config(sys.argv[1]).reduced()
+mesh = make_mesh((4, 2), ("data", "model"))
+model = make_model(cfg, tp=2)
+plan = ShardPlan(mesh, "train")
+shard_fn = make_shard_fn(plan)
+params = model.init(jax.random.PRNGKey(0), jnp.float32)
+pshard = param_shardings(plan, params)
+params = jax.device_put(params, pshard)
+opt = AdamW(lr=1e-3)
+opt_state = jax.device_put(opt.init(params),
+                           {"mu": pshard, "nu": pshard,
+                            "step": jax.sharding.NamedSharding(
+                                mesh, jax.sharding.PartitionSpec())})
+B, S = 8, 32
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab_size)}
+if cfg.family == "vlm":
+    batch["patch_embeds"] = jax.random.normal(
+        jax.random.PRNGKey(2), (B, cfg.num_patches, cfg.d_model))
+if cfg.family == "audio":
+    batch["frame_embeds"] = jax.random.normal(
+        jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model))
+batch = jax.device_put(batch, batch_shardings(plan, batch))
+step = jax.jit(make_train_step(model, opt, shard_fn=shard_fn))
+p2, o2, metrics = step(params, opt_state, batch)
+loss_sharded = float(metrics["loss"])
+
+# single-device reference
+model1 = make_model(cfg, tp=1)
+# NB: padded tp=2 model has its own params; check finiteness + serve path
+serve_plan = ShardPlan(mesh, "serve")
+state = model.init_serve_state(B, 64, jnp.float32)
+sshard = serve_state_shardings(serve_plan, jax.eval_shape(lambda: state), cfg)
+state = jax.device_put(state, sshard)
+logits, state2 = jax.jit(lambda p, s, t, pos: model.decode(p, s, t, pos))(
+    params, state, jnp.zeros((B, 1), jnp.int32), jnp.int32(0))
+print(json.dumps({"loss": loss_sharded,
+                  "decode_finite": bool(jnp.isfinite(logits).all()),
+                  "n_dev": len(jax.devices())}))
+"""
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "grok-1-314b",
+                                  "mamba2-1.3b"])
+def test_small_mesh_train_and_decode(arch, tmp_path):
+    """Real 8-device (host) mesh: sharded train step + decode run and stay
+    finite. Covers dense, MoE and SSM sharding rules."""
+    script = tmp_path / "run.py"
+    script.write_text(_SUBPROC_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    out = subprocess.run([sys.executable, str(script), arch],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert np.isfinite(res["loss"])
+    assert res["decode_finite"]
+
+
+_ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.distributed.elastic import elastic_remesh, reshard_params, \
+    survivors_mesh
+from repro.distributed.sharding import ShardPlan, param_shardings
+from repro.models.model import make_model
+
+cfg = get_config("granite-3-8b").reduced()
+model = make_model(cfg, tp=2)
+params = model.init(jax.random.PRNGKey(0), jnp.float32)
+m1 = elastic_remesh(4, 2)
+p1 = reshard_params(params, ShardPlan(m1, "train"))
+# simulate losing devices 6,7 (data row 3) -> shrink to 3x2
+m2 = survivors_mesh(m1, [6], 2)
+assert m2.shape["data"] == 3, m2.shape
+p2 = reshard_params(p1, ShardPlan(m2, "train"))
+ok = all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(p2))
+import numpy as np
+same = all(np.allclose(np.asarray(a), np.asarray(b))
+           for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+print(json.dumps({"ok": ok, "same": same}))
+"""
+
+
+def test_elastic_remesh_preserves_params(tmp_path):
+    script = tmp_path / "run.py"
+    script.write_text(_ELASTIC_SCRIPT)
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["same"]
+
+
+def test_param_pspec_rules():
+    """Sharding specs: TP dims land on 'model', FSDP on data, scan dims
+    replicated; non-divisible dims fall back to replication."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import ShardPlan, param_pspec
+
+    class FakeLeaf:
+        def __init__(self, shape):
+            self.shape = shape
+            self.ndim = len(shape)
+
+    # build a mesh of host devices = 1; use spec logic only via _fits with
+    # a real (1,1) mesh — divisibility always ok for size-1 axes.
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = ShardPlan(mesh, "train")
+
+    class P_:  # path element stub
+        def __init__(self, k):
+            self.key = k
+
+    spec = param_pspec(plan, (P_("layers"), P_("attn"), P_("wq")),
+                       FakeLeaf((4, 128, 8, 32)))
+    assert spec == jax.sharding.PartitionSpec(None, ("data",), "model", None)
+    spec = param_pspec(plan, (P_("embed"),), FakeLeaf((1000, 128)))
+    assert spec == jax.sharding.PartitionSpec("model", ("data",))
+    # serve mode: fsdp -> replicated
+    plan_s = ShardPlan(mesh, "serve")
+    spec = param_pspec(plan_s, (P_("embed"),), FakeLeaf((1000, 128)))
+    assert spec == jax.sharding.PartitionSpec("model", None)
+    # unknown leaves replicate
+    spec = param_pspec(plan, (P_("A_log"),), FakeLeaf((4, 8)))
+    assert spec == jax.sharding.PartitionSpec()

@@ -1,0 +1,114 @@
+"""Cluster simulator invariants + workload generator properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.paper_cluster import ClusterConfig
+from repro.sim.cluster import ClusterSim
+from repro.workload import TraceConfig, generate_trace
+
+CFG = ClusterConfig(num_nodes=6, provisioning_delay=5)
+
+
+def _uniform(n):
+    return np.full(n, 1.0 / n, np.float32)
+
+
+@given(seed=st.integers(0, 50), rate=st.floats(1.0, 500.0))
+@settings(max_examples=15, deadline=None)
+def test_work_conservation(seed, rate):
+    """arrivals == served + queued (no failures -> no work lost)."""
+    sim = ClusterSim(CFG, 30.0, seed=seed, failures=False)
+    total_in, total_served = 0.0, 0.0
+    for _ in range(50):
+        m = sim.tick(rate, _uniform(6))
+        total_in += rate * CFG.tick_seconds
+        total_served += m["served"]
+    assert total_served + sim.state.queue.sum() == pytest.approx(
+        total_in, rel=1e-4)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_utilization_bounds(seed):
+    sim = ClusterSim(CFG, 30.0, seed=seed, failures=True)
+    rng = np.random.default_rng(seed)
+    for _ in range(80):
+        m = sim.tick(float(rng.uniform(0, 400)), _uniform(6))
+        assert 0.0 <= m["mean_utilization"] <= 1.0 + 1e-6
+        assert (m["utilization"] >= -1e-6).all()
+        assert (m["utilization"] <= 1.0 + 1e-6).all()
+        assert m["response_time"] >= 0.0
+
+
+def test_latency_increases_with_load():
+    lo = ClusterSim(CFG, 30.0, seed=1, failures=False)
+    hi = ClusterSim(CFG, 30.0, seed=1, failures=False)
+    r_lo = [lo.tick(100.0, _uniform(6))["response_time"] for _ in range(60)]
+    r_hi = [hi.tick(3000.0, _uniform(6))["response_time"] for _ in range(60)]
+    assert np.mean(r_hi) > np.mean(r_lo)
+
+
+def test_provisioning_delay_honored():
+    sim = ClusterSim(CFG, 30.0, seed=0, failures=False)
+    before = sim.state.active.copy()
+    sim.scale_to(before + 2)
+    for t in range(CFG.provisioning_delay - 1):
+        sim.tick(10.0, _uniform(6))
+        assert (sim.state.active == before).all(), t
+    sim.tick(10.0, _uniform(6))
+    assert (sim.state.active == before + 2).all()
+
+
+def test_scale_down_immediate():
+    sim = ClusterSim(CFG, 30.0, seed=0, failures=False)
+    before = sim.state.active.copy()
+    sim.scale_to(np.maximum(before - 1, 0))
+    assert (sim.state.active == np.maximum(before - 1, 0)).all()
+
+
+def test_failed_node_work_rerouted():
+    cfg = ClusterConfig(num_nodes=4, node_mtbf=1.0, node_mttr=1e9,
+                        provisioning_delay=2)
+    sim = ClusterSim(cfg, 30.0, seed=3, failures=True)
+    sim.state.queue[:] = 25.0
+    total_before = sim.state.queue.sum()
+    m = sim.tick(0.0, _uniform(4))
+    # every node fails (mtbf=1) -> queues drop to retry pool and re-enter
+    # conservation: served + remaining queue + pool == total (arrivals=0)
+    assert (m["served"] + sim.state.queue.sum() + sim.state.retry_pool
+            == pytest.approx(total_before, rel=1e-4))
+
+
+def test_heterogeneous_capacity():
+    sim = ClusterSim(CFG, 30.0, seed=0, failures=False, heterogeneous=True)
+    caps = sim.capacity()
+    assert len(set(np.round(caps, 3))) > 1  # mixed hardware generations
+
+
+# ---------------------------------------------------------------- workload
+def test_trace_deterministic_and_positive():
+    a = generate_trace(TraceConfig(ticks=500), seed=5)
+    b = generate_trace(TraceConfig(ticks=500), seed=5)
+    np.testing.assert_array_equal(a["arrivals"], b["arrivals"])
+    assert (a["arrivals"] > 0).all()
+
+
+def test_trace_diurnal_and_bursts():
+    t = generate_trace(TraceConfig(ticks=1800, burst_rate=1 / 100), seed=1)
+    arr = t["arrivals"]
+    # diurnal: autocorrelation at the period ≈ high
+    period = 600
+    x = arr - arr.mean()
+    ac = np.corrcoef(x[:-period], x[period:])[0, 1]
+    assert ac > 0.2
+    # bursts: heavy right tail
+    assert arr.max() > 2.5 * np.median(arr)
+
+
+def test_load_scale_scales_mean():
+    lo = generate_trace(TraceConfig(ticks=400), seed=2, load_scale=1.0)
+    hi = generate_trace(TraceConfig(ticks=400), seed=2, load_scale=2.0)
+    assert hi["arrivals"].mean() == pytest.approx(
+        2 * lo["arrivals"].mean(), rel=0.05)
