@@ -1,0 +1,104 @@
+"""Elastic serving-engine benchmark: the perf trajectory of the request path.
+
+A small ``ElasticClusterFrontend`` run with real CPU forwards under the
+unified control plane, reporting tokens/sec, TTFT and end-to-end latency
+percentiles (in ticks), and the prefill retrace count (bucketed prompts
+should compile O(log max_seq) variants, not one per distinct prompt length).
+
+Artifacts: ``results/BENCH_serve.json`` — tracked across PRs so serving-path
+regressions (throughput or recompiles) show up in review.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = "results"
+TICKS = 30
+NODES = 2
+MAX_BATCH = 4
+MAX_SEQ = 64
+N_NEW = 6
+
+
+def main() -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.paper_cluster import ClusterConfig
+    from repro.control import ControlPlane
+    from repro.models import make_model
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    cfg = get_config("granite-3-8b").reduced()
+    model = make_model(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    ccfg = ClusterConfig(num_nodes=NODES, horizon=4, forecast_window=8,
+                         provisioning_delay=2, max_replicas_per_node=2,
+                         min_replicas_per_node=1, scale_interval=4,
+                         cooldown=6, straggler_prob=0.0, node_mtbf=1e12)
+    rng = np.random.default_rng(0)
+
+    def make_replica(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid)
+
+    def request_factory(rid, tick):
+        plen = int(rng.integers(2, 14))
+        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=N_NEW)
+
+    fe = ElasticClusterFrontend(
+        make_replica, NODES, initial_replicas=1, provisioning_delay=2,
+        max_replicas_per_node=2, request_factory=request_factory, seed=0,
+        est_tokens=N_NEW)
+    plane = ControlPlane(ccfg, fe, balancer="rr", scaler="rbas",
+                         unit_capacity=MAX_BATCH / N_NEW, seed=0,
+                         init_arrival=2.0)
+    t0 = time.time()
+    for _ in range(TICKS):
+        plane.step(2.0)
+    fe.run_until_drained()
+    wall = time.time() - t0
+
+    done = fe.finished
+    toks = sum(len(r.output) for r in done)
+    ttft = np.asarray([r.first_token_time - r.arrival for r in done])
+    lat = np.asarray([r.finish_time - r.arrival for r in done])
+    retraces = fe.prefill_retraces()
+    blob = {
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / max(wall, 1e-9), 2),
+        "ttft_p50_ticks": float(np.percentile(ttft, 50)),
+        "ttft_p95_ticks": float(np.percentile(ttft, 95)),
+        "latency_p50_ticks": float(np.percentile(lat, 50)),
+        "latency_p95_ticks": float(np.percentile(lat, 95)),
+        "prefill_retraces": int(retraces),
+        "live_replicas": len([e for n in fe.nodes for e in n.live]),
+        "replica_ticks": fe.replica_ticks,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_serve.json"), "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+
+    us = wall * 1e6 / max(toks, 1)
+    return [
+        ("serve/elastic_tok_per_s", us, f"{blob['tok_per_s']}tok/s"),
+        ("serve/ttft_p95", blob["ttft_p95_ticks"] * 1e6,
+         f"p50={blob['ttft_p50_ticks']:.1f}t"),
+        ("serve/latency_p95", blob["latency_p95_ticks"] * 1e6,
+         f"p50={blob['latency_p50_ticks']:.1f}t"),
+        ("serve/prefill_retraces", float(retraces),
+         f"{len(done)}req"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

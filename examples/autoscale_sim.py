@@ -2,6 +2,10 @@
 bursty Google-cluster-style trace (trains the forecaster + MADRL first).
 
     PYTHONPATH=src python examples/autoscale_sim.py [--ticks 400]
+
+Each row is a ``ControlPlane`` episode over the fluid ``SimBackend``; the
+same plane drives the request-level elastic engine in
+``python -m repro.launch.serve --policy ours --autoscale gpso``.
 """
 import argparse
 

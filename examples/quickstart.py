@@ -3,9 +3,17 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. builds a reduced assigned architecture, trains a few steps,
-2. serves batched requests through the continuous-batching engine,
+2. serves batched requests through the continuous-batching engine
+   (prompts are padded to power-of-two buckets, so prefill compiles
+   O(log max_seq) variants instead of once per prompt length),
 3. runs the paper's control plane (forecast -> MADRL balance -> GPSO scale)
    on a bursty trace and prints the resulting SLO/utilization.
+
+Steps 2 and 3 are two backends of ONE loop: ``repro.control.ControlPlane``
+drives any ``ClusterBackend`` — here the fluid ``ClusterSim`` (via
+``run_episode``), and in ``python -m repro.launch.serve --policy ours
+--autoscale gpso`` the request-level ``ElasticClusterFrontend``, where the
+same forecast->balance->scale tick provisions/drains real model replicas.
 """
 import jax
 import jax.numpy as jnp
@@ -44,7 +52,9 @@ fe.run_until_drained()
 print(f"[quickstart] served {len(fe.finished)} requests, "
       f"{sum(len(r.output) for r in fe.finished)} tokens")
 
-# ---- 3. the paper's control plane --------------------------------------
+# ---- 3. the paper's control plane (fluid backend) ----------------------
+# run_episode binds ControlPlane to a SimBackend; swap in an
+# ElasticClusterFrontend and the identical plane drives real replicas.
 ccfg = ClusterConfig(num_nodes=6)
 trace = generate_trace(TraceConfig(ticks=200), seed=0, load_scale=1.5)
 rl = bal.RLBalancer(ccfg, 4 + ccfg.horizon, seed=0)

@@ -28,8 +28,9 @@ class ClusterConfig:
     # --- failure model ---
     node_mtbf: float = 20_000.0      # mean ticks between node failures
     node_mttr: float = 120.0         # mean ticks to recover
-    straggler_prob: float = 0.02     # chance a node is degraded
+    straggler_prob: float = 0.02     # steady-state fraction of degraded nodes
     straggler_slowdown: float = 0.35 # capacity multiplier when degraded
+    straggler_mean_ticks: float = 20.0  # mean degradation episode length
     # --- GCN/DDPG (sizes unspecified in paper; chosen small, swept in tests) ---
     gcn_layers: int = 2
     gcn_hidden: int = 64

@@ -1,0 +1,7 @@
+"""Unified control plane: one forecast -> balance -> scale loop that drives
+any ``ClusterBackend`` — the fluid ``ClusterSim`` and the request-level
+``ElasticClusterFrontend`` alike."""
+from repro.control.backend import ClusterBackend, SimBackend  # noqa: F401
+from repro.control.plane import (  # noqa: F401
+    METHOD_SPECS, ControlPlane, make_autoscaler,
+)

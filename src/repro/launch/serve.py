@@ -1,14 +1,29 @@
-"""End-to-end serving driver: batched requests through replicated engines
-behind the paper's control plane.
+"""End-to-end serving driver: the paper's full control plane over an elastic
+request-level cluster of real model replicas.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
-        --replicas 3 --requests 48 --policy lc
+Two modes:
 
-Runs reduced-config model replicas (real forwards on CPU) behind the
-ClusterFrontend; reports throughput + TTFT/latency percentiles per policy.
-``--policy fractions`` uses capacity-weighted fractions (the shape of the
-RL balancer's output; the trained MADRL policy itself is exercised in the
-fluid simulator benchmarks, where training is cheap).
+  * **Unified control loop** (the paper's system, §3) — when ``--autoscale``
+    is set or ``--policy ours``: builds an ``ElasticClusterFrontend`` (N
+    nodes of heterogeneous ``ReplicaEngine``s with cold-start provisioning,
+    graceful drain and failure injection) and drives it with the same
+    ``ControlPlane`` (forecast -> balance -> scale) that runs the fluid
+    simulator, over a bursty synthetic trace:
+
+        PYTHONPATH=src python -m repro.launch.serve --policy ours \
+            --autoscale gpso --ticks 60
+
+    ``--policy ours`` uses the MADRL (GCN+DDPG) balancer acting greedily
+    (training it belongs to the cheap fluid simulator — see
+    ``examples/autoscale_sim.py``); ``--autoscale gpso`` runs the Eq.9-11
+    GPSO planner against the live replica counts.
+
+  * **Legacy drain mode** — ``--policy rr|lc|fractions`` with
+    ``--autoscale none``: a fixed batch of requests through the static
+    ``ClusterFrontend``, reporting throughput + TTFT/latency percentiles.
+
+Both report prefill retrace counts: prompts are padded to power-of-two
+buckets so the engine compiles O(log max_seq) prefill variants total.
 """
 from __future__ import annotations
 
@@ -18,31 +33,97 @@ import time
 import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-8b")
-    ap.add_argument("--replicas", type=int, default=2)
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--policy", default="lc",
-                    choices=["rr", "lc", "fractions"])
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _percentiles(xs, qs=(50, 95)):
+    xs = np.asarray(xs, np.float64)
+    return [float(np.percentile(xs, q)) for q in qs]
 
-    import jax
-    import jax.numpy as jnp
 
-    from repro.configs import get_config
+def run_control_loop(args, cfg, model, params):
+    from repro.configs.paper_cluster import ClusterConfig
+    from repro.control import ControlPlane
+    from repro.core import balancer as bal
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+    from repro.workload import TraceConfig, generate_trace
+
+    ccfg = ClusterConfig(
+        num_nodes=args.nodes, horizon=8, forecast_window=16,
+        provisioning_delay=args.provision_delay,
+        max_replicas_per_node=args.max_replicas,
+        min_replicas_per_node=1,      # never plan a node to zero capacity
+        scale_interval=5, cooldown=8, straggler_prob=0.0, node_mtbf=1e12)
+    rng = np.random.default_rng(args.seed)
+
+    def make_replica(rid: int) -> ReplicaEngine:
+        # heterogeneous pool: mixed hardware generations + batch budgets
+        speed = float(rng.choice([0.7, 1.0, 1.4]))
+        mb = int(rng.choice([max(2, args.max_batch // 2), args.max_batch]))
+        return ReplicaEngine(model, params, max_batch=mb,
+                             max_seq=args.max_seq, rid=rid, speed=speed)
+
+    def request_factory(rid: int, tick: int) -> Request:
+        plen = int(rng.integers(2, 12))
+        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=int(rng.integers(4, 12)))
+
+    est_tokens = 8.0
+    fe = ElasticClusterFrontend(
+        make_replica, args.nodes, initial_replicas=args.replicas,
+        provisioning_delay=args.provision_delay,
+        max_replicas_per_node=args.max_replicas,
+        failure_rate=args.failure_rate, request_factory=request_factory,
+        seed=args.seed, est_tokens=est_tokens)
+
+    balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
+                "fractions": "wrr"}[args.policy]
+    rl = None
+    if balancer == "rl":
+        rl = bal.RLBalancer(ccfg, 4 + ccfg.horizon, seed=args.seed)
+    unit_cap = args.max_batch / est_tokens     # replica requests/tick
+    trace = generate_trace(TraceConfig(ticks=args.ticks, base_rate=args.rate,
+                                       diurnal_period=max(args.ticks, 2)),
+                           seed=args.seed)
+    arrivals = trace["arrivals"]
+    plane = ControlPlane(ccfg, fe, balancer=balancer,
+                         scaler=args.autoscale, unit_capacity=unit_cap,
+                         rl=rl, forecast_scale=float(arrivals.mean()),
+                         seed=args.seed,
+                         init_arrival=float(arrivals[:5].mean()))
+
+    print(f"[serve] unified loop: balancer={balancer} "
+          f"autoscale={args.autoscale} nodes={args.nodes} "
+          f"ticks={args.ticks}")
+    t0 = time.time()
+    for t in range(args.ticks):
+        m = plane.step(float(arrivals[t]))
+        if t % 10 == 0 or t == args.ticks - 1:
+            print(f"[serve] t={t:3d} arrivals={arrivals[t]:5.1f}/tick "
+                  f"replicas={m['active_replicas'].tolist()} "
+                  f"queue={m['queue'].astype(int).tolist()} "
+                  f"util={m['mean_utilization']:.2f} "
+                  f"resp={m['response_time']:.1f}t")
+    fe.run_until_drained()
+    wall = time.time() - t0
+
+    done = fe.finished
+    toks = sum(len(r.output) for r in done)
+    traces = fe.prefill_retraces()
+    print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
+          f"({toks / max(wall, 1e-9):.1f} tok/s); "
+          f"replicas spawned={fe.replicas_spawned} "
+          f"failed={fe.failed_replicas} "
+          f"replica-ticks={fe.replica_ticks}")
+    if done:
+        ttft = _percentiles([r.first_token_time - r.arrival for r in done])
+        lat = _percentiles([r.finish_time - r.arrival for r in done])
+        print(f"[serve] TTFT p50={ttft[0]:.1f} p95={ttft[1]:.1f} ticks; "
+              f"latency p50={lat[0]:.1f} p95={lat[1]:.1f} ticks; "
+              f"prefill retraces={traces}")
+
+
+def run_drain_mode(args, cfg, model, params):
     from repro.data.pipeline import prompt_workload
-    from repro.models.model import make_model
-    from repro.serving.engine import ClusterFrontend, ReplicaEngine, Request
-
-    cfg = get_config(args.arch).reduced()
-    model = make_model(cfg, tp=1)
-    params = model.init(jax.random.PRNGKey(args.seed), jnp.float32)
-    print(f"[serve] arch={cfg.name} replicas={args.replicas} "
-          f"policy={args.policy}")
+    from repro.serving.engine import (ClusterFrontend, ReplicaEngine,
+                                      Request, total_prefill_traces)
 
     replicas = [ReplicaEngine(model, params, max_batch=args.max_batch,
                               max_seq=args.max_seq, rid=i)
@@ -74,8 +155,55 @@ def main():
           f"finish p50={np.percentile(lat,50):.1f} "
           f"p95={np.percentile(lat,95):.1f}")
     steps = sum(r.steps for r in replicas)
+    traces = total_prefill_traces(replicas)
     print(f"[serve] decode steps across replicas: {steps} "
-          f"(batch efficiency {toks/max(steps*args.max_batch,1):.2f})")
+          f"(batch efficiency {toks/max(steps*args.max_batch,1):.2f}); "
+          f"prefill retraces: {traces}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--policy", default="lc",
+                    choices=["rr", "lc", "wrr", "fractions", "ours"])
+    ap.add_argument("--autoscale", default=None,
+                    choices=["none", "gpso", "ga", "hpa", "rbas", "static"])
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="initial replicas per node (control mode) / total "
+                         "replicas (drain mode)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--ticks", type=int, default=50)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean request arrivals per tick (control mode)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--provision-delay", type=int, default=3)
+    ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.model import make_model
+
+    cfg = get_config(args.arch).reduced()
+    model = make_model(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(args.seed), jnp.float32)
+    print(f"[serve] arch={cfg.name} policy={args.policy}")
+
+    control_mode = args.policy == "ours" or (args.autoscale or "none") != "none"
+    if control_mode:
+        if args.autoscale is None:
+            args.autoscale = "gpso" if args.policy == "ours" else "none"
+        run_control_loop(args, cfg, model, params)
+    else:
+        if args.policy == "wrr":
+            args.policy = "fractions"
+        run_drain_mode(args, cfg, model, params)
 
 
 if __name__ == "__main__":

@@ -247,7 +247,14 @@ def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
 def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
                cache_dtype=jnp.bfloat16, shard_fn=None):
     """Prefill: full forward + cache fill. Returns (last-token logits, cache,
-    pos). Cache is a scan carry (in-place per-layer writes)."""
+    pos). Cache is a scan carry (in-place per-layer writes).
+
+    ``batch["lengths"]`` (B,) marks the true prompt length per row when the
+    token matrix is right-padded to a bucket length: logits are gathered at
+    ``lengths-1`` and ``pos`` comes back per-row. Causal masking keeps real
+    positions exact under trailing pads; pad K/V beyond ``pos`` is masked by
+    the decode path until overwritten. (MoE capacity routing sees the pad
+    tokens, so padded prefill is exact only when nothing drops.)"""
     h, positions, _ = _embed_inputs(params, cfg, dims, batch, None)
     cache = lm_init_cache(cfg, dims, h.shape[0], cache_len, cache_dtype)
     S = h.shape[1]
@@ -291,6 +298,13 @@ def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
         body, (h, cache["k"], cache["v"]), xs)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head")
-    last = h[:, -1]
+    lengths = batch.get("lengths")
+    if lengths is None:
+        last, pos = h[:, -1], S
+    else:
+        text_start = cfg.num_patches if cfg.family == "vlm" else 0
+        idx = (text_start + lengths - 1).astype(jnp.int32)
+        last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        pos = (text_start + lengths).astype(jnp.int32)
     logits = last @ head if head is not None else last @ params["embed"].T
-    return logits, {"k": new_k, "v": new_v}, S
+    return logits, {"k": new_k, "v": new_v}, pos

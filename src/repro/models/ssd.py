@@ -152,8 +152,14 @@ def causal_conv(x, w, b):
 
 
 def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
-                   shard_fn=None):
-    """Full-sequence Mamba-2 block. x: (B,T,d_model)."""
+                   shard_fn=None, lengths=None):
+    """Full-sequence Mamba-2 block. x: (B,T,d_model).
+
+    ``lengths`` (B,) marks true per-row sequence lengths when x is
+    right-padded: padded steps get dt=0 (decay 1, zero input — exactly inert,
+    the same trick ``ssd_chunked`` uses for chunk padding), and the decode
+    conv state is gathered from the last ``conv_width-1`` *real* positions,
+    so the returned state matches an unpadded forward bit-for-bit."""
     d_inner, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
     H, P = cfg.ssm_heads, cfg.ssm_head_dim
     proj = x @ params["in_proj"]                              # (B,T,din_proj)
@@ -165,6 +171,9 @@ def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
     Bm = xBC[..., d_inner:d_inner + G * N].reshape(*x.shape[:2], G, N)
     Cm = xBC[..., d_inner + G * N:].reshape(*x.shape[:2], G, N)
     dt = softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if lengths is not None:
+        tpos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        dt = jnp.where(tpos[None, :, None] < lengths[:, None, None], dt, 0.0)
     A = -jnp.exp(params["A_log"])
     xh = xs.reshape(*x.shape[:2], H, P)
     y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk,
@@ -175,10 +184,18 @@ def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
     out = y @ params["out_proj"]
     if return_state:
         W = cfg.ssm_conv_width
-        conv_tail = xBC_raw[:, -(W - 1):, :]  # raw window for decode conv state
-        if conv_tail.shape[1] < W - 1:        # prompt shorter than the window
-            conv_tail = jnp.pad(
-                conv_tail, ((0, 0), (W - 1 - conv_tail.shape[1], 0), (0, 0)))
+        if lengths is None:
+            conv_tail = xBC_raw[:, -(W - 1):, :]  # raw window for decode conv
+            if conv_tail.shape[1] < W - 1:        # prompt shorter than window
+                conv_tail = jnp.pad(
+                    conv_tail, ((0, 0), (W - 1 - conv_tail.shape[1], 0),
+                                (0, 0)))
+        else:
+            offs = jnp.arange(-(W - 1), 0, dtype=jnp.int32)   # (W-1,)
+            idx = lengths[:, None].astype(jnp.int32) + offs[None, :]
+            gathered = jnp.take_along_axis(
+                xBC_raw, jnp.maximum(idx, 0)[:, :, None], axis=1)
+            conv_tail = jnp.where((idx >= 0)[:, :, None], gathered, 0.0)
         return out, {"ssm": state, "conv": conv_tail}
     return out
 

@@ -175,8 +175,14 @@ def ssm_decode(params, state, tokens, pos, cfg: ArchConfig, dims: PaddedDims,
 
 def ssm_prefill(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
                 cache_len: int, cache_dtype=jnp.bfloat16, shard_fn=None):
-    """Prefill: returns (last-token logits, serve state, pos)."""
+    """Prefill: returns (last-token logits, serve state, pos).
+
+    ``batch["lengths"]`` (B,) enables right-padded bucketed prompts: padded
+    steps are exactly inert for the SSM state (dt=0), the conv state is
+    gathered from the last real positions, and logits come from ``lengths-1``
+    (``pos`` is then per-row)."""
     h = params["embed"][batch["tokens"]]
+    lengths = batch.get("lengths")
     B, S = h.shape[:2]
     positions = jnp.arange(S, dtype=jnp.int32)
     hybrid = cfg.family == "hybrid"
@@ -210,7 +216,8 @@ def ssm_prefill(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
                                      lambda a: a, (h, ak, av))
         y, st = mamba2_forward(lp["mamba"],
                                rms_norm(h, lp["norm"], cfg.norm_eps), cfg,
-                               return_state=True, shard_fn=shard_fn)
+                               return_state=True, shard_fn=shard_fn,
+                               lengths=lengths)
         h = h + y
         return (h, ak, av), (st["ssm"], st["conv"].astype(cache_dtype))
 
@@ -218,9 +225,14 @@ def ssm_prefill(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
         body, (h, ak, av), (params["layers"], jnp.arange(cfg.num_layers)))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head")
-    last = h[:, -1]
+    if lengths is None:
+        last, pos = h[:, -1], S
+    else:
+        idx = (lengths - 1).astype(jnp.int32)
+        last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        pos = lengths.astype(jnp.int32)
     logits = last @ head if head is not None else last @ params["embed"].T
     new_state = {"ssm": ssm_states, "conv": conv_states}
     if hybrid:
         new_state["attn_k"], new_state["attn_v"] = ak, av
-    return logits, new_state, S
+    return logits, new_state, pos

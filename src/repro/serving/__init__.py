@@ -1,1 +1,4 @@
-from repro.serving.engine import ClusterFrontend, ReplicaEngine, Request  # noqa: F401
+from repro.serving.elastic import ElasticClusterFrontend  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ClusterFrontend, ReplicaEngine, Request, normalize_fractions, pow2_bucket,
+)

@@ -1,0 +1,357 @@
+"""``ElasticClusterFrontend``: a request-level ``ClusterBackend`` over real
+model replicas.
+
+N serving nodes, each holding a mutable group of ``ReplicaEngine``s (real CPU
+model forwards), driven by the same ``ControlPlane`` that drives the fluid
+simulator. Operational semantics mirror ``ClusterSim``:
+
+  * **cold start** — ``scale_to`` additions pass through a provisioning
+    pipeline and only serve after ``provisioning_delay`` ticks;
+  * **graceful drain** — removals stop admitting, hand queued work back to
+    the node, finish their in-flight slots, then retire (no request is ever
+    dropped by a scale-down);
+  * **failure injection** — a failed replica loses its generation progress;
+    every in-flight + queued request is reset and re-queued at the front of
+    the node queue (``fail_replica`` for deterministic tests, ``failure_rate``
+    for Bernoulli-per-tick injection);
+  * **heterogeneity** — the replica factory may vary ``max_batch`` and
+    ``speed`` per replica; speed>1 replicas run multiple decode sub-steps per
+    tick via a credit accumulator, speed<1 skip ticks.
+
+Work units: a node's "queue depth" is its count of unfinished requests, its
+"capacity" is decode slots/tick (sum of ``max_batch * speed`` over live
+replicas). Response times are measured end-to-end in ticks on finished
+requests, with a queueing-theory estimate filling ticks where nothing
+finishes, so the control plane sees the same metric names and shapes as the
+fluid backend.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serving.engine import (ReplicaEngine, Request,
+                                  normalize_fractions)
+
+
+class _Node:
+    __slots__ = ("live", "draining", "spawning", "queue", "credit")
+
+    def __init__(self):
+        self.live: list = []        # serving ReplicaEngines
+        self.draining: list = []    # finishing in-flight work, no admits
+        self.spawning: list = []    # remaining cold-start ticks per add
+        self.queue: deque = deque() # node-level request queue
+        self.credit: dict = {}      # engine id -> fractional step credit
+
+    def unfinished(self) -> int:
+        return len(self.queue) + sum(e.load for e in self.live) + \
+            sum(e.load for e in self.draining)
+
+
+class ElasticClusterFrontend:
+    """Node-structured elastic serving cluster (see module docstring)."""
+
+    def __init__(self, make_replica: Callable[[int], ReplicaEngine],
+                 num_nodes: int, *, initial_replicas: int = 1,
+                 provisioning_delay: int = 0,
+                 max_replicas_per_node: int = 8,
+                 failure_rate: float = 0.0,
+                 request_factory: Optional[Callable[[int, int], Request]] = None,
+                 tick_seconds: float = 1.0, seed: int = 0,
+                 est_tokens: float = 8.0):
+        self.make_replica = make_replica
+        self.num_nodes = num_nodes
+        self.provisioning_delay = int(provisioning_delay)
+        self.max_replicas_per_node = max_replicas_per_node
+        self.failure_rate = failure_rate
+        self.request_factory = request_factory
+        self.tick_seconds = tick_seconds
+        self.rng = np.random.default_rng(seed)
+        self.nodes = [_Node() for _ in range(num_nodes)]
+        self._rid = 0                # engine ids (replicas ever created)
+        self._req_id = 0             # auto-generated request ids
+        self._acc = 0.0              # fractional-arrival accumulator
+        self.t = 0
+        self.pending: deque = deque()
+        self.finished: list = []
+        self.failed_replicas = 0
+        self.replica_ticks = 0
+        self._fractions = np.full(num_nodes, 1.0 / num_nodes, np.float32)
+        self._m: dict = {}
+        self._est_tokens = float(est_tokens)  # EMA of tokens per request
+        self._resp_est = 0.0
+        self._kernel_objs: dict = {}
+        for node in self.nodes:
+            for _ in range(initial_replicas):
+                node.live.append(self._spawn())
+
+    # ----------------------------------------------------------- plumbing
+    def _spawn(self) -> ReplicaEngine:
+        eng = self.make_replica(self._rid)
+        self._rid += 1
+        # remember the (shared) serve kernels so compile counts survive
+        # replica retirement/failure
+        self._kernel_objs[id(eng._kernels)] = eng._kernels
+        return eng
+
+    def prefill_retraces(self) -> int:
+        """Prefill compilations across every replica ever spawned (kernels
+        are shared per model config, so retired replicas still count)."""
+        return sum(k.traces for k in self._kernel_objs.values())
+
+    @property
+    def replicas(self) -> list:
+        """All live replicas (diagnostics)."""
+        return [e for n in self.nodes for e in n.live]
+
+    @property
+    def replicas_spawned(self) -> int:
+        """Replicas ever created (incl. failed/retired ones)."""
+        return self._rid
+
+    def submit(self, req: Request):
+        if req.arrival == 0.0:
+            req.arrival = float(self.t)
+        self.pending.append(req)
+
+    # ------------------------------------------------- ClusterBackend API
+    def up_mask(self) -> np.ndarray:
+        return np.asarray([1.0 if n.live else 0.0 for n in self.nodes],
+                          np.float32)
+
+    def queue_depths(self) -> np.ndarray:
+        return np.asarray([n.unfinished() for n in self.nodes], np.float32)
+
+    def capacity(self) -> np.ndarray:
+        """Decode slots/tick per node (live replicas only)."""
+        return np.asarray(
+            [sum(e.max_batch * e.speed for e in n.live) for n in self.nodes],
+            np.float32)
+
+    def request_capacity(self) -> np.ndarray:
+        """Requests/tick per node at the current mean output length."""
+        return self.capacity() / max(self._est_tokens, 1.0)
+
+    def in_flight(self) -> np.ndarray:
+        return np.asarray(
+            [len(n.live) + len(n.spawning) for n in self.nodes], np.int32)
+
+    @property
+    def node_speed(self) -> np.ndarray:
+        return np.asarray(
+            [np.mean([e.speed for e in n.live]) if n.live else 1.0
+             for n in self.nodes], np.float32)
+
+    def observe(self, forecast: np.ndarray) -> np.ndarray:
+        """Same Eq.1-3 feature layout as ``ClusterSim.observation``."""
+        q = self.queue_depths()
+        cap = self.request_capacity()
+        total_cap = max(cap.sum(), 1e-9)
+        load = q / max(q.sum(), 1.0)
+        util_proxy = np.minimum(q / np.maximum(cap, 1e-9), 4.0) / 4.0
+        capn = cap / total_cap
+        up = self.up_mask()
+        f = np.broadcast_to(forecast[None, :],
+                            (self.num_nodes, forecast.shape[0]))
+        obs = np.concatenate([load[:, None], util_proxy[:, None],
+                              capn[:, None], up[:, None], f], axis=1)
+        return obs.astype(np.float32)
+
+    def route(self, fractions: np.ndarray) -> None:
+        self._fractions = np.asarray(fractions, np.float64)
+
+    def metrics(self) -> dict:
+        return self._m
+
+    def scale_to(self, target: np.ndarray) -> None:
+        """Adds go through cold-start provisioning; removals drain first."""
+        target = np.asarray(target)
+        for i, node in enumerate(self.nodes):
+            tgt = int(np.clip(target[i], 0, self.max_replicas_per_node))
+            in_flight = len(node.live) + len(node.spawning)
+            if tgt > in_flight:
+                node.spawning.extend(
+                    [self.provisioning_delay] * (tgt - in_flight))
+            elif tgt < in_flight:
+                rem = in_flight - tgt
+                while rem and node.spawning:   # cancel pending spawns first
+                    node.spawning.remove(max(node.spawning))
+                    rem -= 1
+                # drain live replicas, least-loaded first
+                for eng in sorted(node.live, key=lambda e: e.load)[:rem]:
+                    self._drain(node, eng)
+
+    def _drain(self, node: _Node, eng: ReplicaEngine):
+        eng.draining = True
+        while eng.queue:                 # un-admitted work goes back
+            node.queue.append(eng.queue.popleft())
+        node.live.remove(eng)
+        node.draining.append(eng)
+
+    # ------------------------------------------------------------ failures
+    def fail_replica(self, node_idx: int, replica_idx: int = 0):
+        """Deterministic failure injection (tests / chaos drills)."""
+        node = self.nodes[node_idx]
+        self._fail(node, node.live[replica_idx])
+
+    def _fail(self, node: _Node, eng: ReplicaEngine):
+        lost = eng.evacuate()
+        node.queue.extendleft(reversed(lost))   # retry lost work first
+        node.live.remove(eng)
+        node.credit.pop(id(eng), None)
+        self.failed_replicas += 1
+
+    def _inject_failures(self):
+        if self.failure_rate <= 0.0:
+            return
+        for node in self.nodes:
+            for eng in list(node.live):
+                if self.rng.random() < self.failure_rate:
+                    self._fail(node, eng)
+
+    # ------------------------------------------------------------- ticking
+    def _advance_provisioning(self):
+        for node in self.nodes:
+            node.spawning = [d - 1 for d in node.spawning]
+            ready = sum(1 for d in node.spawning if d <= 0)
+            node.spawning = [d for d in node.spawning if d > 0]
+            for _ in range(ready):
+                node.live.append(self._spawn())
+
+    def _generate_arrivals(self, arrival_rate: float):
+        if self.request_factory is None or arrival_rate <= 0.0:
+            return
+        self._acc += arrival_rate * self.tick_seconds
+        n = int(self._acc)
+        self._acc -= n
+        for _ in range(n):
+            req = self.request_factory(self._req_id, self.t)
+            self._req_id += 1
+            req.arrival = float(self.t - 1)   # arrives as this tick begins
+            self.pending.append(req)
+
+    def _reroute_stranded(self):
+        """A node with queued work but no live or provisioning replicas would
+        strand it forever — hand it back for global re-routing (the elastic
+        twin of the fluid sim's retry pool)."""
+        for node in self.nodes:
+            if node.queue and not node.live and not node.spawning:
+                while node.queue:
+                    self.pending.appendleft(node.queue.pop())
+
+    def _route_pending(self):
+        mask = self.up_mask()
+        if not (mask > 0).any():
+            return                      # nothing can serve; hold requests
+        fr = normalize_fractions(self._fractions, mask=mask)
+        while self.pending:
+            idx = int(self.rng.choice(self.num_nodes, p=fr))
+            self.nodes[idx].queue.append(self.pending.popleft())
+
+    def _dispatch(self, node: _Node):
+        """Fill free replica slots from the node queue (least-loaded first,
+        normalized by speed so fast replicas pull more work)."""
+        while node.queue:
+            cands = [e for e in node.live if e.load < e.max_batch]
+            if not cands:
+                return
+            eng = min(cands, key=lambda e: e.load / max(e.speed, 1e-6))
+            eng.submit(node.queue.popleft())
+
+    def tick(self, arrival_rate: float = 0.0) -> dict:
+        self.t += 1
+        self._advance_provisioning()
+        self._inject_failures()
+        self._generate_arrivals(arrival_rate)
+        self._reroute_stranded()
+        self._route_pending()
+        finished_now: list = []
+        for node in self.nodes:
+            self._dispatch(node)
+            for eng in list(node.live) + list(node.draining):
+                node.credit[id(eng)] = node.credit.get(id(eng), 0.0) + \
+                    eng.speed
+                n_sub = int(node.credit[id(eng)])
+                node.credit[id(eng)] -= n_sub
+                if n_sub <= 0:
+                    continue
+                eng.clock = float(self.t - 1)
+                for _ in range(n_sub):
+                    finished_now.extend(eng.step(dt=1.0 / n_sub))
+            for eng in list(node.draining):   # retire drained replicas
+                if eng.load == 0:
+                    node.draining.remove(eng)
+                    node.credit.pop(id(eng), None)
+            self.replica_ticks += len(node.live)
+        self.finished.extend(finished_now)
+        self._m = self._compute_metrics(finished_now, arrival_rate)
+        return self._m
+
+    # -------------------------------------------------------------- metrics
+    def _compute_metrics(self, finished_now: list, arrival_rate: float) -> dict:
+        for r in finished_now:
+            self._est_tokens += 0.05 * (len(r.output) - self._est_tokens)
+        q = self.queue_depths()
+        slots = np.asarray(
+            [sum(e.max_batch for e in n.live) for n in self.nodes],
+            np.float32)
+        # demand/capacity utilization, saturating at 1 under backlog — the
+        # same semantics as the fluid sim's served/capacity (a pure busy-slot
+        # fraction dips between retire and re-admit and never signals
+        # saturation to the HPA/RBAS threshold rules).
+        util = np.where(slots > 0,
+                        np.clip(q / np.maximum(slots, 1e-9), 0.0, 1.0), 0.0)
+        up = self.up_mask()
+        req_cap = self.request_capacity()
+        if finished_now:
+            resp = float(np.mean([r.finish_time - r.arrival
+                                  for r in finished_now]))
+            self._resp_est = resp
+        else:
+            # queueing estimate: backlog / service rate + one service time
+            backlog = np.where(req_cap > 1e-9,
+                               q / np.maximum(req_cap, 1e-9), 10.0)
+            est = float(np.mean(backlog)) + self._est_tokens
+            resp = max(self._resp_est, est) if q.sum() > 0 else self._resp_est
+        overload = float(np.mean(np.where(
+            req_cap > 1e-9,
+            np.clip(q / np.maximum(req_cap, 1e-9) / 4.0, 0, 1), 1.0)))
+        return {
+            "utilization": util.astype(np.float32),
+            "mean_utilization": float(np.mean(util[up > 0.5])
+                                      if (up > 0.5).any() else 0.0),
+            "response_time": resp,
+            "served": float(len(finished_now)),
+            "served_tokens": float(sum(len(r.output) for r in finished_now)),
+            "overload": overload,
+            "capacity": req_cap,
+            "queue": q,
+            "up": up,
+            "active_replicas": np.asarray(
+                [len(n.live) for n in self.nodes], np.int32),
+            "replica_ticks": int(sum(len(n.live) for n in self.nodes)),
+        }
+
+    # ------------------------------------------------------------ draining
+    def run_until_drained(self, max_steps: int = 10_000):
+        """Finish all outstanding work (controlled wind-down: chaos
+        injection pauses so the backlog can actually clear)."""
+        rate, self.failure_rate = self.failure_rate, 0.0
+        try:
+            for _ in range(max_steps):
+                # safety: if scaling/failures left the whole cluster with no
+                # capacity while work is outstanding, spawn one drain worker
+                # (an aggressive scale-to-zero must never drop requests)
+                if (self.pending or any(n.unfinished() for n in self.nodes)) \
+                        and not any(n.live or n.spawning for n in self.nodes):
+                    self.nodes[0].live.append(self._spawn())
+                self.tick(0.0)
+                if not self.pending and all(n.unfinished() == 0
+                                            for n in self.nodes):
+                    return
+            raise RuntimeError("elastic cluster did not drain")
+        finally:
+            self.failure_rate = rate

@@ -2,10 +2,19 @@
 
 ``ReplicaEngine`` runs one model replica: slot-based KV/state pool, per-slot
 positions (the vector-``pos`` decode path), admit-on-free-slot, greedy
-sampling, retire-on-EOS/max-tokens. ``ClusterFrontend`` stitches several
-replicas together behind a balancer policy (the paper's RL allocation or the
-baselines) — this is the live counterpart of the fluid simulator, used by the
-integration tests and examples with reduced-config models on CPU.
+sampling, retire-on-EOS/max-tokens. Prompts are right-padded to power-of-two
+length buckets and admitted in batched prefill calls, so the jit'd prefill
+compiles O(log max_seq · log max_batch) times total instead of once per
+distinct prompt length (``prefill_traces`` counts actual retraces). Padded
+prefill is exact for dense/ssm/hybrid: causal attention masks trailing pads
+and the SSM path zeroes dt at pad positions (see
+``models.ssd.mamba2_forward``). MoE buckets too but is exact only when no
+expert-capacity drops occur (capacity scales with the padded length).
+
+``ClusterFrontend`` stitches several replicas together behind a balancer
+policy — the live counterpart of the fluid simulator. The node-structured
+elastic frontend that plugs into the unified control plane lives in
+``repro.serving.elastic``.
 """
 from __future__ import annotations
 
@@ -19,6 +28,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+
+# families whose prefill accepts per-row ``lengths`` (bucketed prompts are
+# exact). audio prefill is driven by encoder frames and stays exact-length;
+# vlm requests carry patch-embed extras, which take the single-admit path
+# below (batching per-request extras is future work).
+_BUCKET_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two >= n (and >= lo)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+class _ServeKernels:
+    """Shared jit'd prefill/decode for one (model, max_seq, cache_dtype):
+    replicas of the same model reuse compiled code instead of re-jitting on
+    every cold start (a scale-up would otherwise stall the tick loop on XLA
+    compilation of identical shapes). ``traces`` counts actual prefill
+    compilations across every replica that shares this object."""
+    __slots__ = ("prefill", "decode", "traces")
+
+
+def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
+    # The cache lives on the Model instance (not a module global) so compiled
+    # executables are reclaimed with the model instead of pinned forever.
+    cache = getattr(model, "_serve_kernels", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(model, "_serve_kernels", cache)  # frozen dataclass
+    key = (max_seq, np.dtype(cache_dtype).name)
+    k = cache.get(key)
+    if k is not None:
+        return k
+    k = _ServeKernels()
+    k.traces = 0
+
+    def _prefill_fn(p, batch):
+        k.traces += 1              # runs at trace time only
+        return model.prefill(p, batch, cache_len=max_seq,
+                             cache_dtype=cache_dtype)
+
+    k.prefill = jax.jit(_prefill_fn)
+    k.decode = jax.jit(lambda p, st, tok, pos: model.decode(p, st, tok, pos))
+    cache[key] = k
+    return k
+
+
+def total_prefill_traces(engines) -> int:
+    """Global prefill compile count, deduped across replicas that share
+    kernels (each replica reports its shared counter)."""
+    seen = {id(e._kernels): e._kernels.traces for e in engines}
+    return sum(seen.values())
 
 
 @dataclasses.dataclass
@@ -37,15 +101,26 @@ class Request:
     def done(self) -> bool:
         return self.finish_time is not None
 
+    def reset_progress(self):
+        """Forget generation progress (replica failure -> re-queue)."""
+        self.output = []
+        self.first_token_time = None
+        self.finish_time = None
+
 
 class ReplicaEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
-                 max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0):
+                 max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0,
+                 speed: float = 1.0, min_bucket: int = 8,
+                 bucket_prompts: Optional[bool] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.rid = rid
+        self.speed = speed            # relative decode speed (hetero hardware)
+        self.min_bucket = min_bucket
+        self.draining = False         # drained replicas admit nothing new
         self.cache = model.init_serve_state(max_batch, max_seq, cache_dtype)
         self.pos = np.zeros(max_batch, np.int32)       # next cache index
         self.last_tok = np.zeros(max_batch, np.int32)
@@ -53,12 +128,17 @@ class ReplicaEngine:
         self.queue: deque = deque()
         self.clock = 0.0
         self.steps = 0
+        if bucket_prompts is None:
+            bucket_prompts = model.cfg.family in _BUCKET_FAMILIES
+        self.bucket_prompts = bucket_prompts
+        self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
+        self._prefill = self._kernels.prefill
+        self._decode = self._kernels.decode
 
-        self._decode = jax.jit(
-            lambda p, st, tok, pos: model.decode(p, st, tok, pos))
-        self._prefill = jax.jit(
-            lambda p, batch: model.prefill(p, batch, cache_len=max_seq,
-                                           cache_dtype=cache_dtype))
+    @property
+    def prefill_traces(self) -> int:
+        """Prefill compilations of this replica's (shared) kernels."""
+        return self._kernels.traces
 
     # ----------------------------------------------------------------- load
     @property
@@ -72,38 +152,84 @@ class ReplicaEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def evacuate(self) -> list:
+        """Failure path: pull every in-flight + queued request off this
+        replica (generation progress is lost) so the caller can re-queue."""
+        lost = [r for r in self.slots if r is not None] + list(self.queue)
+        self.slots = [None] * self.max_batch
+        self.queue.clear()
+        for r in lost:
+            r.reset_progress()
+        return lost
+
     # ------------------------------------------------------------- plumbing
-    def _insert_slot(self, slot: int, small_state, prompt_len: int,
+    def _insert_slot(self, slot: int, small_state, row: int, prompt_len: int,
                      first_tok: int, req: Request):
         def put(big, small):
-            return big.at[:, slot].set(small[:, 0])
+            return big.at[:, slot].set(small[:, row])
         self.cache = jax.tree.map(put, self.cache, small_state)
         self.pos[slot] = prompt_len
         self.last_tok[slot] = first_tok
         self.slots[slot] = req
 
-    def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.popleft()
-                batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
-                extras = getattr(req, "extras", None)
-                if extras:
-                    batch.update({k: jnp.asarray(v) for k, v in extras.items()})
-                logits, small, plen = self._prefill(self.params, batch)
-                tok = int(jnp.argmax(logits[0]))
-                req.output.append(tok)
-                req.first_token_time = self.clock
-                if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
-                    req.finish_time = self.clock
-                    continue
-                self._insert_slot(slot, small, int(plen), tok, req)
+    def _admit_batch(self, slots: list, reqs: list, finished: list,
+                     bucketed: bool):
+        if bucketed:
+            lens = [len(r.prompt) for r in reqs]
+            sb = min(pow2_bucket(max(lens), self.min_bucket), self.max_seq)
+            kb = pow2_bucket(len(reqs))
+            toks = np.zeros((kb, sb), np.int32)
+            lengths = np.ones(kb, np.int32)    # pad rows: length-1 dummies
+            for i, r in enumerate(reqs):
+                toks[i, :len(r.prompt)] = r.prompt
+                lengths[i] = len(r.prompt)
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray(lengths)}
+            logits, small, plen = self._prefill(self.params, batch)
+            plen = np.asarray(plen)
+        else:
+            req = reqs[0]
+            batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+            extras = getattr(req, "extras", None)
+            if extras:
+                batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+            logits, small, plen = self._prefill(self.params, batch)
+            plen = np.full(1, int(plen), np.int32)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            tok = int(first[i])
+            req.output.append(tok)
+            req.first_token_time = self.clock
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+                req.finish_time = self.clock
+                finished.append(req)
+                continue
+            self._insert_slot(slot, small, i, int(plen[i]), tok, req)
+
+    def _admit(self, finished: list):
+        if self.draining:
+            return
+        free = [i for i in range(self.max_batch) if self.slots[i] is None]
+        while free and self.queue:
+            head_has_extras = getattr(self.queue[0], "extras", None)
+            if not self.bucket_prompts or head_has_extras:
+                # exact-length single admit (audio / extras-carrying requests)
+                self._admit_batch([free.pop(0)], [self.queue.popleft()],
+                                  finished, bucketed=False)
+                continue
+            group = []
+            while (self.queue and len(group) < len(free)
+                   and not getattr(self.queue[0], "extras", None)):
+                group.append(self.queue.popleft())
+            self._admit_batch([free.pop(0) for _ in group], group,
+                              finished, bucketed=True)
 
     def step(self, dt: float = 1.0) -> list:
-        """Admit + one decode step for all active slots. Returns finished."""
+        """Admit + one decode step for all active slots. Returns finished
+        (including requests that completed at prefill time)."""
         self.clock += dt
-        self._admit()
-        finished = []
+        finished: list = []
+        self._admit(finished)
         if self.n_active == 0:
             return finished
         toks = jnp.asarray(self.last_tok[:, None])
@@ -124,6 +250,24 @@ class ReplicaEngine:
                 finished.append(req)
                 self.slots[slot] = None
         return finished
+
+
+def normalize_fractions(fr: np.ndarray, mask: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+    """Simplex-normalize routing fractions with a uniform fallback — the
+    numpy twin of ``core.balancer._mask_normalize``. Non-finite or negative
+    entries are zeroed; a zero/NaN sum falls back to uniform over the mask."""
+    fr = np.asarray(fr, np.float64)
+    fr = np.where(np.isfinite(fr) & (fr > 0.0), fr, 0.0)
+    if mask is not None:
+        fr = fr * (np.asarray(mask, np.float64) > 0.0)
+    s = fr.sum()
+    if s <= 1e-12:
+        if mask is not None and (np.asarray(mask) > 0).any():
+            m = (np.asarray(mask) > 0).astype(np.float64)
+            return m / m.sum()
+        return np.full(fr.shape[0], 1.0 / fr.shape[0])
+    return fr / s
 
 
 class ClusterFrontend:
@@ -151,8 +295,7 @@ class ClusterFrontend:
                 loads = [r.load for r in self.replicas]
                 idx = int(np.argmin(loads))
             elif self.policy == "fractions":
-                fr = np.asarray(self.fractions_fn(self))
-                fr = fr / fr.sum()
+                fr = normalize_fractions(self.fractions_fn(self))
                 idx = int(self.rng.choice(len(self.replicas), p=fr))
             else:
                 raise ValueError(self.policy)

@@ -32,6 +32,7 @@ class ClusterState:
     up: np.ndarray             # (N,) 1 healthy / 0 failed
     down_left: np.ndarray      # (N,) ticks of repair remaining
     slow: np.ndarray           # (N,) straggler capacity multiplier
+    slow_left: np.ndarray      # (N,) ticks of degradation remaining
     retry_pool: float          # work dropped from failed nodes, re-enqueued
 
 
@@ -43,6 +44,7 @@ def init_state(n_nodes: int, replicas: int, delay: int) -> ClusterState:
         up=np.ones(n_nodes, np.float32),
         down_left=np.zeros(n_nodes, np.int32),
         slow=np.ones(n_nodes, np.float32),
+        slow_left=np.zeros(n_nodes, np.int32),
         retry_pool=0.0,
     )
 
@@ -143,10 +145,19 @@ class ClusterSim:
             # failed nodes drop their queue into the retry pool
             s.retry_pool += float(s.queue[fail].sum())
             s.queue[fail] = 0.0
-        # stragglers
-        newly_slow = self.rng.random(n) < cfg.straggler_prob
-        s.slow = np.where(newly_slow, cfg.straggler_slowdown, 1.0).astype(
-            np.float32)
+        # stragglers: degradation episodes persist for a sampled duration
+        # (like failures do). Onset probability is normalized by the mean
+        # episode length so the steady-state degraded node fraction stays
+        # ~straggler_prob.
+        s.slow_left = np.maximum(s.slow_left - 1, 0)
+        mean_dur = max(cfg.straggler_mean_ticks, 1.0)
+        onset = (self.rng.random(n) < cfg.straggler_prob / mean_dur) & \
+            (s.slow_left == 0)
+        if onset.any():
+            s.slow_left[onset] = self.rng.geometric(1.0 / mean_dur,
+                                                    onset.sum())
+        s.slow = np.where(s.slow_left > 0, cfg.straggler_slowdown,
+                          1.0).astype(np.float32)
 
     # ---------------------------------------------------------------- tick
     def tick(self, arrivals: float, fractions: np.ndarray) -> dict:

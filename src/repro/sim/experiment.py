@@ -10,22 +10,23 @@ Reproduces the paper's comparison matrix (§4.2):
 
 and produces the Fig.1/2/3 metrics (resource utilization, response time,
 scaling efficiency) plus fairness/SLO/cost aggregates.
+
+The per-tick loop itself lives in ``repro.control.ControlPlane`` — this
+module just binds it to the fluid ``ClusterSim`` backend and aggregates the
+figures; ``repro.launch.serve`` binds the identical plane to the
+request-level elastic engine.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_cluster import ClusterConfig
+from repro.control.backend import SimBackend
+from repro.control.plane import METHOD_SPECS, ControlPlane  # noqa: F401
 from repro.core import balancer as bal
-from repro.core.autoscaler import (GPSOAutoscaler, HPAAutoscaler,
-                                   RBASAutoscaler, StaticAllocator)
-from repro.core.forecaster import forecast as nn_forecast
-from repro.core.forecaster import last_value_baseline
 from repro.sim.cluster import ClusterSim
 
 METHODS = ("RRA", "LCA", "HPA", "RBAS", "OURS")
@@ -67,34 +68,24 @@ def jain_fairness(x: np.ndarray) -> float:
     return float(s * s / max(n * s2, 1e-12))
 
 
-def _make_autoscaler(kind: str, cfg: ClusterConfig, unit_cap: float, seed=0):
-    if kind == "gpso":
-        return GPSOAutoscaler(cfg, unit_cap, seed)
-    if kind == "ga":
-        return GPSOAutoscaler(cfg, unit_cap, seed, optimizer="ga")
-    if kind == "hpa":
-        return HPAAutoscaler(cfg)
-    if kind == "rbas":
-        return RBASAutoscaler(cfg)
-    if kind == "static":
-        return StaticAllocator(max(1, cfg.max_replicas_per_node // 2))
-    raise ValueError(kind)
+def collect_episode(plane: ControlPlane, arrivals: np.ndarray, name: str,
+                    cfg: ClusterConfig, unit_capacity: float) -> EpisodeResult:
+    """Drive a ControlPlane over a trace and aggregate the figure metrics.
 
-
-METHOD_SPECS = {
-    "RRA": ("rr", "static"),
-    "LCA": ("lc", "static"),
-    "HPA": ("rr", "hpa"),
-    "RBAS": ("rr", "rbas"),
-    "OURS": ("rl", "gpso"),
-    # extra references beyond the paper's table + ablations
-    "WRR": ("wrr", "static"),
-    "OURS-GA": ("rl", "ga"),     # GA-only autoscaler (no PSO refinement)
-    "OURS-RR": ("rr", "gpso"),   # GPSO scaling but round-robin balancing
-}
-
-
-_jit_forecast = jax.jit(nn_forecast)
+    Backend-agnostic: works for SimBackend and ElasticClusterFrontend alike
+    (both emit the same metric keys)."""
+    T = arrivals.shape[0]
+    utils, resps, fairs = np.zeros(T), np.zeros(T), np.zeros(T)
+    served_total, replica_ticks = 0.0, 0
+    for t in range(T):
+        m = plane.step(float(arrivals[t]))
+        utils[t] = m["mean_utilization"]
+        resps[t] = m["response_time"]
+        fairs[t] = jain_fairness(m["utilization"] + 1e-6)
+        served_total += m["served"]
+        replica_ticks += m["replica_ticks"]
+    return EpisodeResult(name, utils, resps, fairs, served_total,
+                         replica_ticks, unit_capacity, cfg)
 
 
 def run_episode(cfg: ClusterConfig, trace: dict, method: str, *,
@@ -106,110 +97,16 @@ def run_episode(cfg: ClusterConfig, trace: dict, method: str, *,
                 train_every: int = 2) -> EpisodeResult:
     balancer_kind, scaler_kind = METHOD_SPECS[method]
     sim = ClusterSim(cfg, unit_capacity, seed=seed, failures=failures)
-    scaler = _make_autoscaler(scaler_kind, cfg, unit_capacity, seed)
     arrivals = trace["arrivals"]
     if forecast_scale is None:
         forecast_scale = float(arrivals.mean())
-    T = arrivals.shape[0]
-    N = cfg.num_nodes
-    W, H = cfg.forecast_window, cfg.horizon
-
-    utils, resps, fairs = np.zeros(T), np.zeros(T), np.zeros(T)
-    served_total, replica_ticks = 0.0, 0
-    window = np.full((W,), arrivals[:10].mean(), np.float32)
-    fractions = np.full((N,), 1.0 / N, np.float32)
-    prev = None  # (obs, action) for RL replay
-    resid = np.zeros(64, np.float32)  # rolling 1-step forecast residuals
-    prev_fc1 = None
-
-    for t in range(T):
-        # ---- forecast R̂_{t+1:t+T} (Eq.1)
-        if forecaster_params is not None:
-            fc = np.asarray(_jit_forecast(
-                forecaster_params,
-                jnp.asarray(window[:, None] / forecast_scale)))[:, 0]
-        else:
-            fc = np.asarray(last_value_baseline(
-                jnp.asarray(window[:, None] / forecast_scale), H))[:, 0]
-        fc = fc.astype(np.float32)
-        # rolling forecast-error tracker -> volatility-aware headroom
-        if prev_fc1 is not None:
-            resid = np.roll(resid, -1)
-            resid[-1] = arrivals[t] / forecast_scale - prev_fc1
-        prev_fc1 = float(fc[0])
-
-        obs = sim.observation(fc)
-        up = sim.state.up.copy()
-
-        # ---- balancer action (Eq.4)
-        if balancer_kind == "rr":
-            fractions = np.asarray(bal.round_robin(jnp.asarray(obs),
-                                                   jnp.asarray(up)))
-        elif balancer_kind == "lc":
-            fractions = np.asarray(bal.least_connections(
-                jnp.asarray(sim.state.queue), jnp.asarray(up),
-                jnp.float32(arrivals[t] * cfg.tick_seconds)))
-        elif balancer_kind == "wrr":
-            fractions = np.asarray(bal.weighted_capacity(
-                jnp.asarray(obs), jnp.asarray(up),
-                jnp.asarray(sim.capacity())))
-        elif balancer_kind == "rl":
-            assert rl is not None
-            fractions = np.asarray(rl.act(jnp.asarray(obs), jnp.asarray(up),
-                                          explore=explore))
-        else:
-            raise ValueError(balancer_kind)
-
-        m = sim.tick(arrivals[t], fractions)
-
-        # ---- reward (Eq.5) + replay
-        if balancer_kind == "rl":
-            reward = bal.reward_fn(m["response_time"], m["mean_utilization"],
-                                   cfg.alpha, cfg.beta, m["overload"])
-            if prev is not None and train_rl:
-                rl.observe(prev[0], prev[1], float(prev[2]), obs, up)
-                if t % train_every == 0:
-                    rl.train_step()
-            prev = (obs, fractions, reward)
-
-        # ---- autoscaling: rule-based scalers observe every tick (the k8s
-        # control loop); the GPSO plan runs on scale_interval.
-        in_flight = sim.state.active + sim.state.pending.sum(axis=1)
-        if scaler_kind in ("gpso", "ga"):
-            if t % cfg.scale_interval == 0 and t > 0:
-                # provision for the P95 of predicted demand: forecast peak
-                # plus 2 sigma of recent forecast error (volatility-aware
-                # headroom), so calm periods run lean and bursty ones hold
-                # reserve.
-                sigma = float(resid.std()) * forecast_scale
-                peak = max(float(fc.max()) * forecast_scale,
-                           float(arrivals[t])) + 2.0 * sigma
-                node_demand = peak * np.maximum(fractions, 1.0 / (4 * N))
-                target = scaler.plan(node_demand, t, in_flight,
-                                     node_speed=sim.node_speed)
-                sim.scale_to(target)
-            else:
-                # emergency path: instantaneous overload on a node triggers an
-                # immediate scale-up without waiting for the plan interval
-                hot = m["utilization"] > 0.95
-                if hot.any():
-                    target = in_flight + hot.astype(np.int32)
-                    sim.scale_to(np.minimum(target,
-                                            cfg.max_replicas_per_node))
-        elif scaler_kind != "static":
-            target = scaler.plan(m["utilization"], t, in_flight)
-            sim.scale_to(target)
-
-        utils[t] = m["mean_utilization"]
-        resps[t] = m["response_time"]
-        fairs[t] = jain_fairness(m["utilization"] + 1e-6)
-        served_total += m["served"]
-        replica_ticks += m["replica_ticks"]
-        window = np.roll(window, -1)
-        window[-1] = arrivals[t]
-
-    return EpisodeResult(method, utils, resps, fairs, served_total,
-                         replica_ticks, unit_capacity, cfg)
+    plane = ControlPlane(
+        cfg, SimBackend(sim), balancer=balancer_kind, scaler=scaler_kind,
+        unit_capacity=unit_capacity, rl=rl,
+        forecaster_params=forecaster_params, forecast_scale=forecast_scale,
+        train_rl=train_rl, explore=explore, train_every=train_every,
+        seed=seed, init_arrival=float(arrivals[:10].mean()))
+    return collect_episode(plane, arrivals, method, cfg, unit_capacity)
 
 
 def train_rl_balancer(cfg: ClusterConfig, traces: list, *,

@@ -1,0 +1,33 @@
+"""Optional-hypothesis shim: ``from _hyp import given, settings, st``.
+
+Tier-1 must collect (and run the non-property tests) on machines without
+``hypothesis`` installed (see requirements.txt). When it is available the
+property tests run as written; when it is not, ``@given`` turns the test
+into a skip instead of an ImportError at collection time.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            def _skip():
+                pytest.skip("hypothesis not installed")
+            _skip.__name__ = f.__name__
+            _skip.__doc__ = f.__doc__
+            return _skip
+        return deco

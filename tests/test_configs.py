@@ -2,8 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs import ARCH_NAMES, SHAPES, applicable_shapes, get_config
 from repro.models.dims import padded_dims, q_head_mask

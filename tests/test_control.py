@@ -1,0 +1,308 @@
+"""Unified control plane + elastic request-level backend.
+
+Covers the ClusterBackend contract both ways: operational semantics of the
+elastic engine (cold-start provisioning, drain-before-remove, failure
+re-queue, heterogeneous replicas), the bucketed-prefill retrace bound, the
+routing-fraction guard, straggler persistence in the fluid sim, and ranking
+parity between the fluid and request-level backends under the same plane.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_cluster import ClusterConfig
+from repro.control import ControlPlane, SimBackend
+from repro.models import make_model
+from repro.serving import (ClusterFrontend, ElasticClusterFrontend,
+                           ReplicaEngine, Request, normalize_fractions)
+from repro.sim.cluster import ClusterSim
+from repro.sim.experiment import collect_episode
+
+MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    c = get_config("granite-3-8b").reduced()
+    m = make_model(c, tp=1)
+    params = m.init(jax.random.PRNGKey(0), jnp.float32)
+    return c, m, params
+
+
+def _factory(m, params, max_batch=2, speed=1.0):
+    def make_replica(rid):
+        return ReplicaEngine(m, params, max_batch=max_batch, max_seq=MAX_SEQ,
+                             rid=rid, speed=speed)
+    return make_replica
+
+
+def _req(i, plen=4, n_new=4):
+    return Request(i, [1 + (i + j) % 97 for j in range(plen)],
+                   max_new_tokens=n_new)
+
+
+# ---------------------------------------------------------------- elastic
+def test_scale_up_respects_provisioning_delay(setup):
+    c, m, params = setup
+    fe = ElasticClusterFrontend(_factory(m, params), 1, initial_replicas=1,
+                                provisioning_delay=3)
+    fe.scale_to(np.array([3]))
+    assert fe.in_flight().tolist() == [3]
+    live = []
+    for _ in range(4):
+        fe.tick(0.0)
+        live.append(len(fe.nodes[0].live))
+    # cold start: nothing serves before the delay elapses, then all arrive
+    assert live == [1, 1, 3, 3]
+
+
+def test_drain_before_remove_finishes_in_flight(setup):
+    c, m, params = setup
+    fe = ElasticClusterFrontend(_factory(m, params), 1, initial_replicas=2)
+    reqs = [_req(i, n_new=6) for i in range(4)]
+    for r in reqs:
+        fe.submit(r)
+    fe.tick(0.0)                          # route + admit across both replicas
+    assert all(e.n_active > 0 for e in fe.nodes[0].live)
+    fe.scale_to(np.array([1]))            # remove one replica
+    node = fe.nodes[0]
+    assert len(node.live) == 1 and len(node.draining) == 1
+    drained = node.draining[0]
+    assert drained.draining and drained.n_active > 0
+    fe.run_until_drained()
+    # no dropped in-flight work: every request finished with full output
+    assert all(r.done and len(r.output) == 6 for r in reqs)
+    assert node.draining == [] and len(node.live) == 1
+    # a draining replica admits nothing new
+    fe.submit(_req(99, n_new=2))
+    fe.run_until_drained()
+    assert drained.steps <= 6 + 1         # only its original slot work
+
+
+def test_replica_failure_requeues_lost_work(setup):
+    c, m, params = setup
+    fe = ElasticClusterFrontend(_factory(m, params), 1, initial_replicas=2)
+    reqs = [_req(i, n_new=5) for i in range(4)]
+    for r in reqs:
+        fe.submit(r)
+    fe.tick(0.0)
+    victim = fe.nodes[0].live[0]
+    carried = [r for r in victim.slots if r is not None] + list(victim.queue)
+    assert carried, "victim replica should hold work"
+    fe.fail_replica(0, 0)
+    assert fe.failed_replicas == 1
+    assert len(fe.nodes[0].live) == 1
+    # lost requests had their progress reset and sit back in the node queue
+    assert all(not r.done and r.output == [] for r in carried)
+    fe.run_until_drained()
+    assert all(r.done and len(r.output) == 5 for r in reqs)
+
+
+def test_dead_node_work_reroutes_to_healthy_node(setup):
+    """When every replica on a node dies, its queued work must migrate to
+    healthy nodes (the elastic twin of the sim's retry pool) instead of
+    stranding forever."""
+    c, m, params = setup
+    fe = ElasticClusterFrontend(_factory(m, params), 2, initial_replicas=1)
+    fe.route(np.array([1.0, 0.0]))        # pin everything to node 0
+    reqs = [_req(i, n_new=3) for i in range(4)]
+    for r in reqs:
+        fe.submit(r)
+    fe.tick(0.0)
+    fe.fail_replica(0, 0)                 # node 0 now has no replicas
+    assert fe.up_mask().tolist() == [0.0, 1.0]
+    fe.route(np.array([0.5, 0.5]))        # routing guard masks dead node
+    fe.run_until_drained()
+    assert all(r.done and len(r.output) == 3 for r in reqs)
+
+
+def test_heterogeneous_speed_drains_faster(setup):
+    c, m, params = setup
+
+    def drain_ticks(speed):
+        fe = ElasticClusterFrontend(_factory(m, params, max_batch=2,
+                                             speed=speed), 1,
+                                    initial_replicas=1)
+        for i in range(6):
+            fe.submit(_req(i, n_new=6))
+        for t in range(1, 200):
+            fe.tick(0.0)
+            if fe.nodes[0].unfinished() == 0 and not fe.pending:
+                return t
+        raise AssertionError("did not drain")
+
+    # a 2x-speed replica runs two decode sub-steps per tick via the credit
+    # scheduler -> roughly half the wall-clock ticks
+    assert drain_ticks(2.0) < 0.7 * drain_ticks(1.0)
+
+
+# ---------------------------------------------------- prefill retrace bound
+def test_prefill_retraces_bounded_by_buckets(setup):
+    """Acceptance: prefill compiles O(log max_seq) bucketed variants, not
+    once per distinct prompt length."""
+    c, m, params = setup
+    eng = ReplicaEngine(m, params, max_batch=4, max_seq=MAX_SEQ)
+    t0 = eng.prefill_traces        # kernels are shared across replicas of
+    lens = list(range(2, 31))      # the same model; count this run's delta
+    for i, L in enumerate(lens):
+        eng.submit(_req(i, plen=L, n_new=2))
+    for _ in range(400):
+        eng.step()
+        if eng.load == 0:
+            break
+    assert eng.load == 0
+    compiles = eng.prefill_traces - t0
+    len_buckets = int(np.log2(MAX_SEQ // eng.min_bucket)) + 1
+    batch_buckets = int(np.log2(eng.max_batch)) + 1
+    assert compiles <= len_buckets * batch_buckets
+    assert compiles < len(set(lens))   # beats once-per-prompt-length
+
+
+def test_replicas_share_compiled_kernels(setup):
+    """A cold-started replica of the same model reuses compiled serve
+    kernels instead of re-jitting (scale-ups must not stall on XLA)."""
+    c, m, params = setup
+    e1 = ReplicaEngine(m, params, max_batch=2, max_seq=MAX_SEQ)
+    e1.submit(_req(0, plen=4, n_new=2))
+    e1.step()
+    before = e1.prefill_traces
+    e2 = ReplicaEngine(m, params, max_batch=2, max_seq=MAX_SEQ)
+    assert e2._prefill is e1._prefill
+    e2.submit(_req(1, plen=4, n_new=2))
+    e2.step()
+    assert e2.prefill_traces == before    # same shape -> zero new compiles
+
+
+# ------------------------------------------------------- fraction guard
+def test_normalize_fractions_guards_zero_and_nan():
+    n = 4
+    uniform = np.full(n, 0.25)
+    assert np.allclose(normalize_fractions(np.zeros(n)), uniform)
+    assert np.allclose(normalize_fractions(np.full(n, np.nan)), uniform)
+    assert np.allclose(normalize_fractions(np.array([-1.0, 0, 0, 0])),
+                       uniform)
+    masked = normalize_fractions(np.zeros(n), mask=np.array([1, 1, 0, 0]))
+    assert np.allclose(masked, [0.5, 0.5, 0, 0])
+    fr = normalize_fractions(np.array([np.inf, 1.0, 0, 0]))
+    assert np.isfinite(fr).all() and fr.sum() == pytest.approx(1.0)
+
+
+def test_frontend_fractions_policy_survives_bad_fn(setup):
+    c, m, params = setup
+    engines = [ReplicaEngine(m, params, max_batch=2, max_seq=MAX_SEQ, rid=i)
+               for i in range(2)]
+    fe = ClusterFrontend(engines, policy="fractions",
+                         fractions_fn=lambda fe: np.zeros(2))
+    for i in range(4):
+        fe.submit(_req(i, n_new=2))
+    fe.run_until_drained()
+    assert len(fe.finished) == 4
+
+
+# ------------------------------------------------- straggler persistence
+def test_straggler_slowdown_persists_across_ticks():
+    cfg = ClusterConfig(num_nodes=4, straggler_prob=0.0, node_mtbf=1e12)
+    sim = ClusterSim(cfg, 30.0, seed=0, failures=True)
+    sim.state.slow_left[:] = 3
+    uniform = np.full(4, 0.25, np.float32)
+    slows = []
+    for _ in range(4):
+        sim.tick(1.0, uniform)
+        slows.append(float(sim.state.slow[0]))
+    # degraded for the sampled duration, then recovers (the old code reset
+    # the multiplier from a fresh Bernoulli draw every tick)
+    assert slows[:2] == pytest.approx([cfg.straggler_slowdown] * 2)
+    assert slows[-1] == 1.0
+
+
+# ------------------------------------------------------- backend parity
+def _parity_cfg():
+    return ClusterConfig(
+        num_nodes=2, horizon=4, forecast_window=8, provisioning_delay=2,
+        max_replicas_per_node=2, min_replicas_per_node=1, scale_interval=3,
+        cooldown=6, straggler_prob=0.0, node_mtbf=1e12)
+
+
+N_NEW = 4          # fixed decode length -> replica rate = max_batch / N_NEW
+
+
+def _run_elastic(m, params, cfg, arrivals, scaler):
+    def request_factory(rid, tick):
+        return Request(rid, [1 + rid % 50, 2, 3, 4], max_new_tokens=N_NEW)
+
+    fe = ElasticClusterFrontend(
+        _factory(m, params, max_batch=2), cfg.num_nodes, initial_replicas=1,
+        provisioning_delay=cfg.provisioning_delay,
+        max_replicas_per_node=cfg.max_replicas_per_node,
+        request_factory=request_factory, seed=0, est_tokens=N_NEW)
+    plane = ControlPlane(cfg, fe, balancer="rr", scaler=scaler,
+                         unit_capacity=2.0 / N_NEW, seed=0,
+                         init_arrival=float(arrivals[:5].mean()))
+    return collect_episode(plane, arrivals, scaler, cfg,
+                           unit_capacity=2.0 / N_NEW)
+
+
+def _run_sim(cfg, arrivals, scaler):
+    sim = ClusterSim(cfg, 2.0 / N_NEW, seed=0, failures=False,
+                     heterogeneous=False)
+    plane = ControlPlane(cfg, SimBackend(sim), balancer="rr", scaler=scaler,
+                         unit_capacity=2.0 / N_NEW, seed=0,
+                         init_arrival=float(arrivals[:5].mean()))
+    return collect_episode(plane, arrivals, scaler, cfg,
+                           unit_capacity=2.0 / N_NEW)
+
+
+def test_method_ranking_matches_across_backends(setup):
+    """The same ControlPlane over the fluid sim and the request-level engine
+    must rank scaling policies identically: under a saturating trace, the
+    rule-based autoscaler beats the static allocation on response time on
+    BOTH backends (the paper's qualitative claim, ported to real forwards)."""
+    c, m, params = setup
+    # 1.6 req/tick vs static capacity of 2 nodes x 1 replica x 0.5 req/tick:
+    # static saturates, the autoscaler can double capacity.
+    arrivals = np.full(36, 1.6, np.float32)
+    cfg = _parity_cfg()
+    rankings = {}
+    for backend in ("sim", "engine"):
+        res = {}
+        for scaler in ("static", "rbas"):
+            runner = _run_sim if backend == "sim" else _run_elastic
+            if backend == "sim":
+                r = runner(cfg, arrivals, scaler)
+            else:
+                r = runner(m, params, cfg, arrivals, scaler)
+            res[scaler] = r.summary(warmup=8)["mean_resp"]
+        rankings[backend] = sorted(res, key=res.get)
+    assert rankings["sim"] == rankings["engine"]
+    assert rankings["sim"][0] == "rbas"   # autoscaling wins under saturation
+
+
+def test_ours_stack_runs_on_elastic_backend(setup):
+    """Full OURS wiring (RL balancer + GPSO autoscaler) drives the elastic
+    backend end-to-end and produces finite metrics + scaling actions."""
+    from repro.core import balancer as bal
+
+    c, m, params = setup
+    cfg = _parity_cfg()
+    rl = bal.RLBalancer(cfg, 4 + cfg.horizon, seed=0)
+
+    def request_factory(rid, tick):
+        return Request(rid, [1, 2, 3, 4], max_new_tokens=N_NEW)
+
+    fe = ElasticClusterFrontend(
+        _factory(m, params, max_batch=2), cfg.num_nodes, initial_replicas=1,
+        provisioning_delay=1,
+        max_replicas_per_node=cfg.max_replicas_per_node,
+        request_factory=request_factory, seed=0, est_tokens=N_NEW)
+    plane = ControlPlane(cfg, fe, balancer="rl", scaler="gpso",
+                         unit_capacity=2.0 / N_NEW, rl=rl, seed=0,
+                         init_arrival=1.5)
+    for _ in range(8):
+        m_ = plane.step(1.5)
+    assert np.isfinite(m_["response_time"])
+    assert np.isfinite(m_["mean_utilization"])
+    assert (fe.in_flight() >= 1).all()
+    fe.run_until_drained()
+    assert all(r.done for r in fe.finished)

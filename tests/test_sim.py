@@ -1,8 +1,7 @@
 """Cluster simulator invariants + workload generator properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.configs.paper_cluster import ClusterConfig
 from repro.sim.cluster import ClusterSim
