@@ -1,12 +1,20 @@
 """Elastic serving-engine benchmark: the perf trajectory of the request path.
 
-A small ``ElasticClusterFrontend`` run with real CPU forwards under the
-unified control plane, reporting tokens/sec, TTFT and end-to-end latency
-percentiles (in ticks), and the prefill retrace count (bucketed prompts
-should compile O(log max_seq) variants, not one per distinct prompt length).
+Three phases over real CPU forwards:
+
+  * **fleet vs per-replica** — the same saturating workload through 4
+    same-model replicas (2 nodes x 2) with fleet-batched decode ON and OFF:
+    tokens/sec both ways, the speedup, and ``decode_dispatches_per_tick``
+    (fleet mode must issue ONE jitted decode per fleet group per tick);
+  * **tick-cost scaling** — saturated steps/sec at fleet sizes 1/2/4/8 on
+    one node (a fleet-batched hot loop should be near-flat: tick cost is one
+    dispatch regardless of replica count);
+  * **control-plane run** — the original ControlPlane-driven trace for
+    TTFT/latency percentiles and the prefill retrace bound, plus the int8
+    KV-cache capacity gain (``cache_dtype="int8"``).
 
 Artifacts: ``results/BENCH_serve.json`` — tracked across PRs so serving-path
-regressions (throughput or recompiles) show up in review.
+regressions (throughput, recompiles, dispatch counts) show up in review.
 """
 from __future__ import annotations
 
@@ -22,39 +30,155 @@ NODES = 2
 MAX_BATCH = 4
 MAX_SEQ = 64
 N_NEW = 6
+FLEET_SIZES = (1, 2, 4, 8)
 
 
-def main() -> list:
-    import jax
-    import jax.numpy as jnp
-
-    from repro.configs import get_config
-    from repro.configs.paper_cluster import ClusterConfig
-    from repro.control import ControlPlane
-    from repro.models import make_model
-    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
-
-    cfg = get_config("granite-3-8b").reduced()
-    model = make_model(cfg, tp=1)
-    params = model.init(jax.random.PRNGKey(0), jnp.float32)
-    ccfg = ClusterConfig(num_nodes=NODES, horizon=4, forecast_window=8,
-                         provisioning_delay=2, max_replicas_per_node=2,
-                         min_replicas_per_node=1, scale_interval=4,
-                         cooldown=6, straggler_prob=0.0, node_mtbf=1e12)
-    rng = np.random.default_rng(0)
+def _mk(model, params, cfg):
+    from repro.serving import ReplicaEngine
 
     def make_replica(rid):
         return ReplicaEngine(model, params, max_batch=MAX_BATCH,
                              max_seq=MAX_SEQ, rid=rid)
+    return make_replica
+
+
+def _request_factory(cfg, rng):
+    from repro.serving import Request
 
     def request_factory(rid, tick):
         plen = int(rng.integers(2, 14))
         return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
                        max_new_tokens=N_NEW)
+    return request_factory
 
+
+FLEET_MAX_BATCH = 2      # small per-replica batches: the dispatch-bound
+FLEET_N_NEW = 32         # regime the fleet path targets (decode-heavy)
+FLEET_RATE = 0.4
+
+
+def bench_fleet_vs_loop(model, params, cfg) -> dict:
+    """Same workload, 4 same-model replicas, fleet decode on vs off.
+
+    Paired/interleaved measurement: both frontends advance in alternating
+    tick chunks so machine noise hits both modes equally (CI boxes are
+    noisy; a sequential A-then-B timing swings 2-3x run to run)."""
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    def make_fe(fleet):
+        rng = np.random.default_rng(0)
+
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=FLEET_MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid)
+
+        def rf(rid, tick):
+            plen = int(rng.integers(2, 14))
+            return Request(rid,
+                           rng.integers(1, cfg.vocab_size, plen).tolist(),
+                           max_new_tokens=FLEET_N_NEW)
+
+        return ElasticClusterFrontend(
+            mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+            fleet_batch=fleet, request_factory=rf, seed=0,
+            est_tokens=FLEET_N_NEW)
+
+    loop_fe, fleet_fe = make_fe(False), make_fe(True)
+    for fe in (loop_fe, fleet_fe):       # warm compiles + fill slots
+        for _ in range(6):
+            fe.tick(FLEET_RATE)
+    wall = {False: 0.0, True: 0.0}
+    toks = {False: 0, True: 0}
+    disp, groups = 0, 0
+    for _ in range(10):                  # 10 rounds x 6-tick chunks
+        for fe, key in ((loop_fe, False), (fleet_fe, True)):
+            done0 = sum(len(r.output) for r in fe.finished)
+            t0 = time.perf_counter()
+            for _ in range(6):
+                m = fe.tick(FLEET_RATE)
+                if key:
+                    disp += m["decode_dispatches"]
+                    groups += max(m["fleet_groups"], 1)
+            wall[key] += time.perf_counter() - t0
+            toks[key] += sum(len(r.output) for r in fe.finished) - done0
+    loop_tps = toks[False] / max(wall[False], 1e-9)
+    fleet_tps = toks[True] / max(wall[True], 1e-9)
+    return {
+        "tok_per_s": round(fleet_tps, 2),
+        "tok_per_s_per_replica_loop": round(loop_tps, 2),
+        "fleet_speedup": round(fleet_tps / max(loop_tps, 1e-9), 2),
+        "decode_dispatches_per_tick": round(disp / max(groups, 1), 3),
+    }
+
+
+def bench_tick_scaling(model, params, cfg) -> dict:
+    """Saturated steps/sec vs fleet size (flat curve == batched hot loop)."""
+    from repro.serving import ElasticClusterFrontend, Request
+
+    steps_per_s = {}
+    for size in FLEET_SIZES:
+        fe = ElasticClusterFrontend(
+            _mk(model, params, cfg), 1, initial_replicas=size,
+            max_replicas_per_node=size, seed=0, est_tokens=N_NEW)
+        rid = 0
+        rng = np.random.default_rng(1)
+
+        def refill():
+            nonlocal rid
+            while (len(fe.pending) + sum(n.unfinished() for n in fe.nodes)
+                   < 2 * size * MAX_BATCH):
+                plen = int(rng.integers(2, 14))
+                fe.submit(Request(
+                    rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                    max_new_tokens=32))
+                rid += 1
+
+        for _ in range(3):                 # warm compiles + fill slots
+            refill()
+            fe.tick(0.0)
+        t0 = time.time()
+        timed = 12
+        for _ in range(timed):
+            refill()
+            fe.tick(0.0)
+        steps_per_s[str(size)] = round(timed / max(time.time() - t0, 1e-9), 2)
+    return {"steps_per_s": steps_per_s}
+
+
+def bench_int8_capacity(model) -> dict:
+    """Bytes of one replica's KV pool, fp32 vs int8 codec."""
+    import jax
+    import jax.numpy as jnp
+
+    def nbytes(dtype):
+        st = jax.eval_shape(
+            lambda: model.init_serve_state(MAX_BATCH, MAX_SEQ, dtype))
+        return int(sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+                       for l in jax.tree.leaves(st)))
+
+    fp32, int8 = nbytes(jnp.float32), nbytes("int8")
+    return {
+        "kv_pool_bytes_fp32": fp32,
+        "kv_pool_bytes_int8": int8,
+        "kv_capacity_gain_int8": round(fp32 / int8, 2),
+    }
+
+
+def bench_control_plane(model, params, cfg) -> dict:
+    """The original autoscaled trace: latency percentiles + retraces."""
+    from repro.configs.paper_cluster import ClusterConfig
+    from repro.control import ControlPlane
+    from repro.serving import ElasticClusterFrontend
+
+    ccfg = ClusterConfig(num_nodes=NODES, horizon=4, forecast_window=8,
+                         provisioning_delay=2, max_replicas_per_node=2,
+                         min_replicas_per_node=1, scale_interval=4,
+                         cooldown=6, straggler_prob=0.0, node_mtbf=1e12)
+    rng = np.random.default_rng(0)
     fe = ElasticClusterFrontend(
-        make_replica, NODES, initial_replicas=1, provisioning_delay=2,
-        max_replicas_per_node=2, request_factory=request_factory, seed=0,
+        _mk(model, params, cfg), NODES, initial_replicas=1,
+        provisioning_delay=2, max_replicas_per_node=2,
+        request_factory=_request_factory(cfg, rng), seed=0,
         est_tokens=N_NEW)
     plane = ControlPlane(ccfg, fe, balancer="rr", scaler="rbas",
                          unit_capacity=MAX_BATCH / N_NEW, seed=0,
@@ -69,33 +193,57 @@ def main() -> list:
     toks = sum(len(r.output) for r in done)
     ttft = np.asarray([r.first_token_time - r.arrival for r in done])
     lat = np.asarray([r.finish_time - r.arrival for r in done])
-    retraces = fe.prefill_retraces()
-    blob = {
+    return {
         "requests": len(done),
         "tokens": toks,
         "wall_s": round(wall, 3),
-        "tok_per_s": round(toks / max(wall, 1e-9), 2),
+        "plane_tok_per_s": round(toks / max(wall, 1e-9), 2),
         "ttft_p50_ticks": float(np.percentile(ttft, 50)),
         "ttft_p95_ticks": float(np.percentile(ttft, 95)),
         "latency_p50_ticks": float(np.percentile(lat, 50)),
         "latency_p95_ticks": float(np.percentile(lat, 95)),
-        "prefill_retraces": int(retraces),
-        "live_replicas": len([e for n in fe.nodes for e in n.live]),
+        "prefill_retraces": int(fe.prefill_retraces()),
+        "live_replicas": len(fe.replicas),
         "replica_ticks": fe.replica_ticks,
     }
+
+
+def main() -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import make_model
+
+    cfg = get_config("granite-3-8b").reduced()
+    model = make_model(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+
+    blob = {}
+    blob.update(bench_fleet_vs_loop(model, params, cfg))
+    blob.update(bench_tick_scaling(model, params, cfg))
+    blob.update(bench_int8_capacity(model))
+    blob.update(bench_control_plane(model, params, cfg))
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "BENCH_serve.json"), "w") as f:
         json.dump(blob, f, indent=2, sort_keys=True)
 
-    us = wall * 1e6 / max(toks, 1)
+    flat = blob["steps_per_s"]
     return [
-        ("serve/elastic_tok_per_s", us, f"{blob['tok_per_s']}tok/s"),
+        ("serve/elastic_tok_per_s", 1e6 / max(blob["tok_per_s"], 1e-9),
+         f"{blob['tok_per_s']}tok/s fleet"),
+        ("serve/fleet_speedup_x", blob["fleet_speedup"] * 1e6,
+         f"vs {blob['tok_per_s_per_replica_loop']}tok/s loop"),
+        ("serve/decode_dispatches_per_tick",
+         blob["decode_dispatches_per_tick"] * 1e6, "per fleet group"),
+        ("serve/steps_per_s_8_replicas", 1e6 / max(flat["8"], 1e-9),
+         f"1rep={flat['1']}/s 8rep={flat['8']}/s"),
         ("serve/ttft_p95", blob["ttft_p95_ticks"] * 1e6,
          f"p50={blob['ttft_p50_ticks']:.1f}t"),
         ("serve/latency_p95", blob["latency_p95_ticks"] * 1e6,
          f"p50={blob['latency_p50_ticks']:.1f}t"),
-        ("serve/prefill_retraces", float(retraces),
-         f"{len(done)}req"),
+        ("serve/prefill_retraces", float(blob["prefill_retraces"]),
+         f"{blob['requests']}req"),
     ]
 
 

@@ -138,6 +138,14 @@ class ControlPlane:
         cfg = self.cfg
         in_flight = self.backend.in_flight()
         if self.scaler_kind in ("gpso", "ga"):
+            # measured service rates: once the backend's finished-request EMA
+            # is warm (``service_rate`` per live replica), the planner uses
+            # it instead of the static unit_capacity guess — closing the loop
+            # on replica throughput. Backends that don't measure (the fluid
+            # sim) simply never emit the key and keep the constant.
+            measured = m.get("service_rate")
+            if measured:
+                self.scaler.unit_capacity = float(measured)
             if self.t % cfg.scale_interval == 0 and self.t > 0:
                 # provision for the P95 of predicted demand: forecast peak
                 # plus 2 sigma of recent forecast error, so calm periods run

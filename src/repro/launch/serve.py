@@ -71,7 +71,8 @@ def run_control_loop(args, cfg, model, params):
         provisioning_delay=args.provision_delay,
         max_replicas_per_node=args.max_replicas,
         failure_rate=args.failure_rate, request_factory=request_factory,
-        seed=args.seed, est_tokens=est_tokens)
+        seed=args.seed, est_tokens=est_tokens,
+        fleet_batch=not args.no_fleet)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -111,7 +112,8 @@ def run_control_loop(args, cfg, model, params):
           f"({toks / max(wall, 1e-9):.1f} tok/s); "
           f"replicas spawned={fe.replicas_spawned} "
           f"failed={fe.failed_replicas} "
-          f"replica-ticks={fe.replica_ticks}")
+          f"replica-ticks={fe.replica_ticks} "
+          f"decode-dispatches={fe.decode_dispatches()}")
     if done:
         ttft = _percentiles([r.first_token_time - r.arrival for r in done])
         lat = _percentiles([r.finish_time - r.arrival for r in done])
@@ -181,6 +183,9 @@ def main():
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--provision-delay", type=int, default=3)
     ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="disable fleet-batched decode (per-replica jit "
+                         "dispatch loop; A/B baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

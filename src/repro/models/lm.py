@@ -180,11 +180,28 @@ def lm_forward(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
 
 
 # ---------------------------------------------------------------- serve path
+def _is_int8(dtype) -> bool:
+    """The string sentinel "int8" selects the quantized KV codec (per-token,
+    per-head absmax scales — see ``repro.serving.kv_quant``)."""
+    return isinstance(dtype, str) and dtype == "int8"
+
+
 def lm_init_cache(cfg, dims, batch: int, max_len: int, dtype=jnp.bfloat16):
     n_layers = cfg.num_layers
     hd = cfg.resolved_head_dim
     if cfg.family == "vlm":
         max_len = max_len + cfg.num_patches
+    if _is_int8(dtype):
+        return {
+            "k_q": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd),
+                             jnp.int8),
+            "v_q": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd),
+                             jnp.int8),
+            "k_s": jnp.ones((n_layers, batch, max_len, dims.n_kv),
+                            jnp.float32),
+            "v_s": jnp.ones((n_layers, batch, max_len, dims.n_kv),
+                            jnp.float32),
+        }
     return {
         "k": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd), dtype),
         "v": jnp.zeros((n_layers, batch, max_len, dims.n_kv, hd), dtype),
@@ -198,50 +215,58 @@ def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
 
     The full stacked cache (L,B,S,G,hd) is the scan CARRY with in-place
     single-token writes — no per-layer cache stacking copies (the caches
-    should be donated by the caller for true in-place update).
+    should be donated by the caller for true in-place update). An int8
+    quantized cache (``k_q``/``v_q``/``k_s``/``v_s`` leaves) is detected
+    from its structure: new tokens quantize on write, reads dequantize on
+    the fly (the HBM stream is the int8 bytes + scales).
     """
+    quant = "k_q" in cache
     h = params["embed"][tokens]                              # (B,1,d)
     me = cfg.moe_every if "moe_layers" in params else 1
     n_groups = cfg.num_layers // me
 
-    def sublayer(h, lp, layer_idx, kc_full, vc_full):
+    def sublayer(h, lp, layer_idx, cache):
         x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
         q, k_new, v_new = attn.project_decode_qkv(lp["attn"], x, dims, pos,
                                                   cfg.rope_theta)
-        kc = jax.lax.dynamic_index_in_dim(kc_full, layer_idx, 0, False)
-        vc = jax.lax.dynamic_index_in_dim(vc_full, layer_idx, 0, False)
-        kc, vc = attn.write_kv(kc, vc, k_new, v_new, pos)
-        kc_full = jax.lax.dynamic_update_index_in_dim(kc_full, kc,
-                                                      layer_idx, 0)
-        vc_full = jax.lax.dynamic_update_index_in_dim(vc_full, vc,
-                                                      layer_idx, 0)
+        lc = {k: jax.lax.dynamic_index_in_dim(v, layer_idx, 0, False)
+              for k, v in cache.items()}
+        if quant:
+            from repro.serving.kv_quant import dequantize, write_kv_quant
+            lc = write_kv_quant(lc, k_new, v_new, pos)
+            kc = dequantize(lc["k_q"], lc["k_s"]).astype(q.dtype)
+            vc = dequantize(lc["v_q"], lc["v_s"]).astype(q.dtype)
+        else:
+            kc, vc = attn.write_kv(lc["k"], lc["v"], k_new, v_new, pos)
+            lc = {"k": kc, "v": vc}
+        cache = {k: jax.lax.dynamic_update_index_in_dim(cache[k], lc[k],
+                                                        layer_idx, 0)
+                 for k in cache}
         y = attn.decode_attend(lp["attn"], q, kc, vc, pos, dims)
         h = h + y
         h, _ = _ffn_sublayer(lp, h, cfg, shard_fn)
-        return h, kc_full, vc_full
+        return h, cache
 
     def body(carry, xs):
-        h, kc_full, vc_full = carry
+        h, cache = carry
         lps, g = xs
         for j in range(me):
             lp = lps if me == 1 else (
                 lps[0] if j == 0
                 else jax.tree.map(lambda x: x[j - 1], lps[1]))
-            h, kc_full, vc_full = sublayer(h, lp, g * me + j, kc_full,
-                                           vc_full)
-        return (h, kc_full, vc_full), None
+            h, cache = sublayer(h, lp, g * me + j, cache)
+        return (h, cache), None
 
     if me == 1:
         xs = (params["layers"], jnp.arange(n_groups))
     else:
         xs = ((params["moe_layers"], params["dense_layers"]),
               jnp.arange(n_groups))
-    (h, new_k, new_v), _ = jax.lax.scan(
-        body, (h, cache["k"], cache["v"]), xs)
+    (h, new_cache), _ = jax.lax.scan(body, (h, cache), xs)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head")
     logits = h @ head if head is not None else h @ params["embed"].T
-    return logits[:, 0], {"k": new_k, "v": new_v}
+    return logits[:, 0], new_cache
 
 
 def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
@@ -254,9 +279,15 @@ def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
     ``lengths-1`` and ``pos`` comes back per-row. Causal masking keeps real
     positions exact under trailing pads; pad K/V beyond ``pos`` is masked by
     the decode path until overwritten. (MoE capacity routing sees the pad
-    tokens, so padded prefill is exact only when nothing drops.)"""
+    tokens, so padded prefill is exact only when nothing drops.)
+
+    ``cache_dtype="int8"`` runs the forward in f32 and quantizes the filled
+    cache once at the end (prefill is compute-bound; only decode needs the
+    int8 memory stream)."""
+    quant = _is_int8(cache_dtype)
     h, positions, _ = _embed_inputs(params, cfg, dims, batch, None)
-    cache = lm_init_cache(cfg, dims, h.shape[0], cache_len, cache_dtype)
+    cache = lm_init_cache(cfg, dims, h.shape[0], cache_len,
+                          jnp.float32 if quant else cache_dtype)
     S = h.shape[1]
     me = cfg.moe_every if "moe_layers" in params else 1
     n_groups = cfg.num_layers // me
@@ -307,4 +338,9 @@ def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
         last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
         pos = (text_start + lengths).astype(jnp.int32)
     logits = last @ head if head is not None else last @ params["embed"].T
+    if quant:
+        from repro.serving.kv_quant import quantize
+        kq, ks = quantize(new_k)
+        vq, vs = quantize(new_v)
+        return logits, {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}, pos
     return logits, {"k": new_k, "v": new_v}, pos

@@ -122,7 +122,14 @@ class Model:
     # --------------------------------------------------------------- serving
     def init_serve_state(self, batch: int, cache_len: int,
                          cache_dtype=jnp.bfloat16):
+        """``cache_dtype`` may be the string "int8" for dense/moe/vlm: the
+        KV pool is stored int8 with per-(token, head) absmax scales (see
+        ``repro.serving.kv_quant``) — ~3.6x slot capacity per byte vs f32."""
         c, d = self.cfg, self.dims
+        if cache_dtype == "int8" and c.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"int8 cache needs an attention KV pool; family={c.family!r} "
+                "keeps SSM/conv state in float")
         if c.family in ("dense", "moe", "vlm"):
             return lm.lm_init_cache(c, d, batch, cache_len, cache_dtype)
         if c.family in ("ssm", "hybrid"):

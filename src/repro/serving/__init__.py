@@ -1,4 +1,5 @@
 from repro.serving.elastic import ElasticClusterFrontend  # noqa: F401
 from repro.serving.engine import (  # noqa: F401
-    ClusterFrontend, ReplicaEngine, Request, normalize_fractions, pow2_bucket,
+    ClusterFrontend, FleetGroup, ReplicaEngine, Request, normalize_fractions,
+    pow2_bucket,
 )

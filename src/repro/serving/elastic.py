@@ -24,6 +24,22 @@ replicas). Response times are measured end-to-end in ticks on finished
 requests, with a queueing-theory estimate filling ticks where nothing
 finishes, so the control plane sees the same metric names and shapes as the
 fluid backend.
+
+**Fleet-batched ticks** (default): live + draining replicas that share a
+``(model, params, max_batch, max_seq, cache_dtype)`` are stacked into
+``FleetGroup``s — across node boundaries — so one tick advances every
+replica of a group with ONE jitted decode dispatch and one small batched
+host sync, instead of a Python-dispatched jit call + per-slot ``int()``
+syncs per replica. Groups survive scale-up (slab rows grow in pow2 steps),
+graceful drain (a draining member keeps decoding in the fleet until empty)
+and failure (its row is dropped and backfilled). Heterogeneous speeds run
+as sub-step *rounds*: a round where only a subset of a group steps uses the
+masked fleet kernel so non-stepping rows' state is untouched. Set
+``fleet_batch=False`` to recover the per-replica ``step()`` loop (the
+parity oracle). ``metrics()['decode_dispatches']`` counts this tick's
+dispatches; the fleet path also feeds the measured per-replica service-rate
+EMA (``metrics()['service_rate']``) that the control plane hands to the
+GPSO planner once warm.
 """
 from __future__ import annotations
 
@@ -32,8 +48,11 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.serving.engine import (ReplicaEngine, Request,
+from repro.serving.engine import (FleetGroup, ReplicaEngine, Request,
                                   normalize_fractions)
+
+_SERVICE_RATE_WARMUP = 8       # measured-rate ticks before the EMA is trusted
+_SERVICE_RATE_ALPHA = 0.1
 
 
 class _Node:
@@ -61,7 +80,7 @@ class ElasticClusterFrontend:
                  failure_rate: float = 0.0,
                  request_factory: Optional[Callable[[int, int], Request]] = None,
                  tick_seconds: float = 1.0, seed: int = 0,
-                 est_tokens: float = 8.0):
+                 est_tokens: float = 8.0, fleet_batch: bool = True):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
         self.provisioning_delay = int(provisioning_delay)
@@ -69,6 +88,7 @@ class ElasticClusterFrontend:
         self.failure_rate = failure_rate
         self.request_factory = request_factory
         self.tick_seconds = tick_seconds
+        self.fleet_batch = fleet_batch
         self.rng = np.random.default_rng(seed)
         self.nodes = [_Node() for _ in range(num_nodes)]
         self._rid = 0                # engine ids (replicas ever created)
@@ -84,9 +104,14 @@ class ElasticClusterFrontend:
         self._est_tokens = float(est_tokens)  # EMA of tokens per request
         self._resp_est = 0.0
         self._kernel_objs: dict = {}
+        self._fleets: dict = {}      # fleet_key -> FleetGroup (spans nodes)
+        self._tick_dispatches = 0    # decode dispatches issued this tick
+        self._retired_dispatches = 0  # dispatch counts of evicted groups
+        self._srv_rate: Optional[float] = None  # per-replica req/tick EMA
+        self._srv_obs = 0            # ticks the EMA has been fed
         for node in self.nodes:
             for _ in range(initial_replicas):
-                node.live.append(self._spawn())
+                self._go_live(node)
 
     # ----------------------------------------------------------- plumbing
     def _spawn(self) -> ReplicaEngine:
@@ -97,10 +122,43 @@ class ElasticClusterFrontend:
         self._kernel_objs[id(eng._kernels)] = eng._kernels
         return eng
 
+    def _go_live(self, node: _Node) -> ReplicaEngine:
+        """Spawn a replica onto ``node`` and enroll it in its fleet group
+        (groups span nodes: the fleet axis is per model-shape, not per
+        node)."""
+        eng = self._spawn()
+        node.live.append(eng)
+        if self.fleet_batch:
+            g = self._fleets.get(eng.fleet_key)
+            if g is None:
+                g = self._fleets[eng.fleet_key] = FleetGroup(
+                    eng.model, eng.params, max_batch=eng.max_batch,
+                    max_seq=eng.max_seq, cache_dtype=eng.cache_dtype)
+            g.add(eng)
+        return eng
+
+    def _leave_fleet(self, eng: ReplicaEngine, restore: bool):
+        g = eng._fleet
+        if g is None:
+            return
+        g.remove(eng, restore=restore)
+        if not g.members:
+            # evict the empty group so its high-water-mark slab doesn't pin
+            # device memory forever (a re-spawn re-allocates from zeros)
+            self._retired_dispatches += g.dispatches
+            self._fleets = {k: v for k, v in self._fleets.items()
+                            if v is not g}
+
     def prefill_retraces(self) -> int:
         """Prefill compilations across every replica ever spawned (kernels
         are shared per model config, so retired replicas still count)."""
         return sum(k.traces for k in self._kernel_objs.values())
+
+    def decode_dispatches(self) -> int:
+        """Total jitted fleet decode dispatches issued (fleet mode),
+        including groups since evicted."""
+        return self._retired_dispatches + \
+            sum(g.dispatches for g in self._fleets.values())
 
     @property
     def replicas(self) -> list:
@@ -202,6 +260,7 @@ class ElasticClusterFrontend:
         node.queue.extendleft(reversed(lost))   # retry lost work first
         node.live.remove(eng)
         node.credit.pop(id(eng), None)
+        self._leave_fleet(eng, restore=False)   # row dropped, not unstacked
         self.failed_replicas += 1
 
     def _inject_failures(self):
@@ -219,7 +278,7 @@ class ElasticClusterFrontend:
             ready = sum(1 for d in node.spawning if d <= 0)
             node.spawning = [d for d in node.spawning if d > 0]
             for _ in range(ready):
-                node.live.append(self._spawn())
+                self._go_live(node)
 
     def _generate_arrivals(self, arrival_rate: float):
         if self.request_factory is None or arrival_rate <= 0.0:
@@ -269,6 +328,8 @@ class ElasticClusterFrontend:
         self._reroute_stranded()
         self._route_pending()
         finished_now: list = []
+        self._tick_dispatches = 0
+        stepping: list = []          # (engine, n_substeps) across ALL nodes
         for node in self.nodes:
             self._dispatch(node)
             for eng in list(node.live) + list(node.draining):
@@ -279,21 +340,69 @@ class ElasticClusterFrontend:
                 if n_sub <= 0:
                     continue
                 eng.clock = float(self.t - 1)
-                for _ in range(n_sub):
-                    finished_now.extend(eng.step(dt=1.0 / n_sub))
+                stepping.append((eng, n_sub))
+        # sub-step rounds: round r advances every engine with n_sub > r, so
+        # a homogeneous-speed cluster runs exactly one round and each fleet
+        # group issues ONE decode dispatch for the whole tick. Engines are
+        # independent within a tick (node queues were dispatched above), so
+        # round interleaving matches stepping them one by one.
+        max_sub = max((n for _, n in stepping), default=0)
+        for r in range(max_sub):
+            round_engines = [(e, n) for e, n in stepping if n > r]
+            for eng, n in round_engines:
+                finished_now.extend(eng.begin_step(dt=1.0 / n))
+            ids = {id(e) for e, _ in round_engines}
+            for g in self._fleets.values():
+                before = g.dispatches
+                finished_now.extend(g.decode_round(ids))
+                self._tick_dispatches += g.dispatches - before
+            for eng, _ in round_engines:     # engines outside any fleet
+                if eng._fleet is None:
+                    if eng.n_active:
+                        self._tick_dispatches += 1
+                    finished_now.extend(eng.finish_step())
+        for node in self.nodes:
             for eng in list(node.draining):   # retire drained replicas
                 if eng.load == 0:
                     node.draining.remove(eng)
                     node.credit.pop(id(eng), None)
+                    # retired-empty: nothing worth unstacking from the slab
+                    self._leave_fleet(eng, restore=False)
             self.replica_ticks += len(node.live)
         self.finished.extend(finished_now)
         self._m = self._compute_metrics(finished_now, arrival_rate)
         return self._m
 
     # -------------------------------------------------------------- metrics
+    def _update_service_rate(self, finished_now: list):
+        """EMA of measured per-replica requests/tick, fed to the autoscaler
+        in place of the static ``unit_capacity`` once warm. Only ticks where
+        the cluster is actually serving (work in flight or completions) count
+        — idle ticks would drag the estimate to zero."""
+        # draining replicas still finish work, so they count as servers —
+        # dividing by live only would inflate the rate during scale-downs
+        serving = sum(len(n.live) + len(n.draining) for n in self.nodes)
+        busy = finished_now or any(n.unfinished() for n in self.nodes)
+        if serving <= 0 or not busy:
+            return
+        rate = len(finished_now) / serving
+        if self._srv_rate is None:
+            self._srv_rate = rate
+        else:
+            self._srv_rate += _SERVICE_RATE_ALPHA * (rate - self._srv_rate)
+        self._srv_obs += 1
+
+    @property
+    def service_rate(self) -> Optional[float]:
+        """Measured per-replica req/tick, or None until the EMA warms up."""
+        if self._srv_obs < _SERVICE_RATE_WARMUP or not self._srv_rate:
+            return None
+        return float(self._srv_rate)
+
     def _compute_metrics(self, finished_now: list, arrival_rate: float) -> dict:
         for r in finished_now:
             self._est_tokens += 0.05 * (len(r.output) - self._est_tokens)
+        self._update_service_rate(finished_now)
         q = self.queue_depths()
         slots = np.asarray(
             [sum(e.max_batch for e in n.live) for n in self.nodes],
@@ -333,6 +442,10 @@ class ElasticClusterFrontend:
             "active_replicas": np.asarray(
                 [len(n.live) for n in self.nodes], np.int32),
             "replica_ticks": int(sum(len(n.live) for n in self.nodes)),
+            "decode_dispatches": int(self._tick_dispatches),
+            "fleet_groups": int(sum(1 for g in self._fleets.values()
+                                    if len(g))),
+            "service_rate": self.service_rate,
         }
 
     # ------------------------------------------------------------ draining
@@ -347,7 +460,7 @@ class ElasticClusterFrontend:
                 # (an aggressive scale-to-zero must never drop requests)
                 if (self.pending or any(n.unfinished() for n in self.nodes)) \
                         and not any(n.live or n.spawning for n in self.nodes):
-                    self.nodes[0].live.append(self._spawn())
+                    self._go_live(self.nodes[0])
                 self.tick(0.0)
                 if not self.pending and all(n.unfinished() == 0
                                             for n in self.nodes):

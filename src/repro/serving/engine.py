@@ -10,6 +10,31 @@ prefill is exact for dense/ssm/hybrid: causal attention masks trailing pads
 and the SSM path zeroes dt at pad positions (see
 ``models.ssd.mamba2_forward``). MoE buckets too but is exact only when no
 expert-capacity drops occur (capacity scales with the padded length).
+Prompts longer than ``max_seq - 1`` are truncated to their last
+``max_seq - 1`` tokens at admission (the KV pool can never overflow).
+
+**Fleet-batched decode.** Slot bookkeeping (the ``Request`` objects, host
+``pos``/``last_tok`` mirrors, queues, clocks) lives on the engine; the device
+cache may live either on the engine (standalone) or stacked along a leading
+fleet axis inside a ``FleetGroup`` shared by every replica of the same
+``(model, params, max_batch, max_seq, cache_dtype)``. A fleet group advances
+*all* member replicas with ONE jitted ``fleet_decode`` dispatch per tick:
+greedy argmax and per-slot retire decisions (max-tokens / EOS / cache-full)
+are fused into the jitted function and synced back as a single small
+``(fleet, batch)`` int/bool array pair — instead of one dispatch plus
+per-slot ``int()`` syncs per replica. Membership survives scale-up, drain
+and failure by stacking/unstacking cache rows (capacity grows in power-of-two
+steps so fleet-size churn retraces O(log F) times, and removed rows are
+backfilled swap-style in one device op).
+
+``ReplicaEngine.step()`` remains the standalone per-replica path (exact-length
+vlm/audio admission, heterogeneous ``max_seq``) and is the parity oracle for
+the fleet path.
+
+``cache_dtype`` accepts the string ``"int8"`` for dense/moe/vlm replicas:
+the KV pool is then stored int8 with per-(token, head) f32 absmax scales
+(``repro.serving.kv_quant``), roughly 3.6x the slot capacity of an fp32 pool
+for the same bytes.
 
 ``ClusterFrontend`` stitches several replicas together behind a balancer
 policy — the live counterpart of the fluid simulator. The node-structured
@@ -49,8 +74,17 @@ class _ServeKernels:
     replicas of the same model reuse compiled code instead of re-jitting on
     every cold start (a scale-up would otherwise stall the tick loop on XLA
     compilation of identical shapes). ``traces`` counts actual prefill
-    compilations across every replica that shares this object."""
-    __slots__ = ("prefill", "decode", "traces")
+    compilations across every replica that shares this object. ``fleet`` /
+    ``fleet_masked`` advance a whole stacked fleet of replicas in one
+    dispatch with sampling and retire decisions fused on device (the masked
+    variant leaves non-stepping rows' cache untouched, for heterogeneous
+    replica speeds)."""
+    __slots__ = ("prefill", "decode", "fleet", "fleet_masked", "traces")
+
+
+def _dtype_name(cache_dtype) -> str:
+    return cache_dtype if isinstance(cache_dtype, str) else \
+        np.dtype(cache_dtype).name
 
 
 def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
@@ -60,7 +94,7 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
     if cache is None:
         cache = {}
         object.__setattr__(model, "_serve_kernels", cache)  # frozen dataclass
-    key = (max_seq, np.dtype(cache_dtype).name)
+    key = (max_seq, _dtype_name(cache_dtype))
     k = cache.get(key)
     if k is not None:
         return k
@@ -72,10 +106,156 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
         return model.prefill(p, batch, cache_len=max_seq,
                              cache_dtype=cache_dtype)
 
+    def _fleet_fn(p, slab, toks, pos, rem, eos, active):
+        """One dispatch for a stacked fleet. slab: cache pytree with a
+        leading fleet axis; toks/pos/rem/eos/active: (F, B). Returns the
+        next greedy token per slot, the fused retire mask, and the advanced
+        slab. The retire rule is the exact device twin of the host rule in
+        ``ReplicaEngine.finish_step``: after appending this token a slot is
+        done when it reached max_new_tokens (rem <= 1), emitted EOS, or its
+        next write index would hit the end of the cache."""
+        logits, new_slab = jax.vmap(
+            lambda c, t, q: model.decode(p, c, t, q))(slab, toks[..., None],
+                                                      pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        done = active & ((rem <= 1) | (nxt == eos)
+                         | (pos + 1 >= max_seq - 1))
+        return nxt, done, new_slab
+
+    def _fleet_masked_fn(p, slab, toks, pos, rem, eos, active, rows):
+        """Fleet dispatch where only ``rows`` (F,) advance — other rows keep
+        their cache bit-for-bit (an SSM state must not step twice)."""
+        nxt, done, new_slab = _fleet_fn(p, slab, toks, pos, rem, eos, active)
+
+        def sel(old, new):
+            m = rows.reshape((rows.shape[0],) + (1,) * (old.ndim - 1))
+            return jnp.where(m, new, old)
+
+        return nxt, done & rows[:, None], jax.tree.map(sel, slab, new_slab)
+
     k.prefill = jax.jit(_prefill_fn)
     k.decode = jax.jit(lambda p, st, tok, pos: model.decode(p, st, tok, pos))
+    # the fleet slab is owned exclusively by the FleetGroup (member engines
+    # hold cache=None), so the input buffer can be donated: XLA updates the
+    # KV slab in place instead of copying it every dispatch.
+    k.fleet = jax.jit(_fleet_fn, donate_argnums=(1,))
+    k.fleet_masked = jax.jit(_fleet_masked_fn, donate_argnums=(1,))
     cache[key] = k
     return k
+
+
+class FleetGroup:
+    """Stacks the device state of same-shape replicas along a leading fleet
+    axis and advances every member with one jitted dispatch per tick.
+
+    The slab capacity grows in power-of-two steps (O(log F) retraces as the
+    fleet scales 1 -> F); spare rows decode throwaway state and are fully
+    overwritten when a replica joins, so they need no masking. Removing a
+    member (drain retire / failure) backfills its row with the last member's
+    row in a single device op, so live rows stay dense."""
+
+    def __init__(self, model: Model, params, *, max_batch: int, max_seq: int,
+                 cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.members: list = []     # ReplicaEngine; fleet row == list index
+        self.cap = 0                # allocated fleet rows (power of two)
+        self.slab = None            # cache pytree, leaves (cap, *per_replica)
+        self.dispatches = 0         # jitted fleet decode dispatches issued
+        self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    # -------------------------------------------------------------- members
+    def add(self, eng: "ReplicaEngine"):
+        """Stack ``eng``'s device cache into the slab (any in-flight slot
+        state rides along, so replicas can join mid-generation)."""
+        assert eng._fleet is None, "engine already belongs to a fleet"
+        row = len(self.members)
+        if row >= self.cap:
+            new_cap = pow2_bucket(row + 1)
+            if self.slab is None:
+                self.slab = jax.tree.map(
+                    lambda c: jnp.zeros((new_cap,) + c.shape, c.dtype),
+                    eng.cache)
+            else:
+                self.slab = jax.tree.map(
+                    lambda s: jnp.concatenate(
+                        [s, jnp.zeros((new_cap - self.cap,) + s.shape[1:],
+                                      s.dtype)]), self.slab)
+            self.cap = new_cap
+        self.slab = jax.tree.map(lambda s, c: s.at[row].set(c),
+                                 self.slab, eng.cache)
+        eng.cache = None
+        eng._fleet, eng._fleet_row = self, row
+        self.members.append(eng)
+
+    def remove(self, eng: "ReplicaEngine", restore: bool = True):
+        """Detach ``eng``; with ``restore`` its cache row is unstacked back
+        onto the engine (drain hand-back), otherwise dropped (failure)."""
+        row = eng._fleet_row
+        assert eng._fleet is self and self.members[row] is eng
+        if restore:
+            eng.cache = jax.tree.map(lambda s: s[row], self.slab)
+        last = self.members.pop()
+        if last is not eng:          # backfill the hole with the last row
+            self.slab = jax.tree.map(
+                lambda s: s.at[row].set(s[len(self.members)]), self.slab)
+            last._fleet_row = row
+            self.members[row] = last
+        eng._fleet, eng._fleet_row = None, -1
+
+    # -------------------------------------------------------------- slots
+    def write_slot(self, f: int, slot: int, small_state, row: int):
+        """Copy prefill output row ``row`` into member ``f``'s slot."""
+        self.slab = jax.tree.map(
+            lambda s, sm: s.at[f, :, slot].set(sm[:, row]),
+            self.slab, small_state)
+
+    # -------------------------------------------------------------- decode
+    def decode_round(self, stepping_ids=None) -> list:
+        """One fused decode step for every member (or the ``id(engine)``
+        subset in ``stepping_ids``). Returns finished requests. The whole
+        round costs one jitted dispatch and one small (F, B) host sync."""
+        movers = [e for e in self.members
+                  if stepping_ids is None or id(e) in stepping_ids]
+        if not movers or not any(e.n_active for e in movers):
+            return []
+        cap, B = self.cap, self.max_batch
+        toks = np.zeros((cap, B), np.int32)
+        pos = np.zeros((cap, B), np.int32)
+        rem = np.ones((cap, B), np.int32)
+        eos = np.full((cap, B), -1, np.int32)
+        active = np.zeros((cap, B), bool)
+        rows = np.zeros((cap,), bool)
+        for e in movers:
+            f = e._fleet_row
+            rows[f] = True
+            toks[f] = e.last_tok
+            pos[f] = e.pos
+            for s, req in enumerate(e.slots):
+                if req is not None:
+                    active[f, s] = True
+                    rem[f, s] = req.max_new_tokens - len(req.output)
+                    eos[f, s] = req.eos_id
+        if len(movers) == len(self.members):
+            nxt, done, self.slab = self._kernels.fleet(
+                self.params, self.slab, toks, pos, rem, eos, active)
+        else:
+            nxt, done, self.slab = self._kernels.fleet_masked(
+                self.params, self.slab, toks, pos, rem, eos, active, rows)
+        self.dispatches += 1
+        nxt, done = jax.device_get((nxt, done))   # ONE small host sync
+        nxt, done = np.asarray(nxt), np.asarray(done)
+        finished: list = []
+        for e in movers:
+            f = e._fleet_row
+            finished.extend(e.commit_decode(nxt[f], done[f]))
+        return finished
 
 
 def total_prefill_traces(engines) -> int:
@@ -117,6 +297,7 @@ class ReplicaEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
         self.rid = rid
         self.speed = speed            # relative decode speed (hetero hardware)
         self.min_bucket = min_bucket
@@ -128,12 +309,20 @@ class ReplicaEngine:
         self.queue: deque = deque()
         self.clock = 0.0
         self.steps = 0
+        self._fleet: Optional[FleetGroup] = None   # device state owner when
+        self._fleet_row = -1                       # fleet-batched
         if bucket_prompts is None:
             bucket_prompts = model.cfg.family in _BUCKET_FAMILIES
         self.bucket_prompts = bucket_prompts
         self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
         self._prefill = self._kernels.prefill
         self._decode = self._kernels.decode
+
+    @property
+    def fleet_key(self) -> tuple:
+        """Replicas with equal keys can share one stacked fleet slab."""
+        return (id(self.model), id(self.params), self.max_batch,
+                self.max_seq, _dtype_name(self.cache_dtype))
 
     @property
     def prefill_traces(self) -> int:
@@ -165,9 +354,12 @@ class ReplicaEngine:
     # ------------------------------------------------------------- plumbing
     def _insert_slot(self, slot: int, small_state, row: int, prompt_len: int,
                      first_tok: int, req: Request):
-        def put(big, small):
-            return big.at[:, slot].set(small[:, row])
-        self.cache = jax.tree.map(put, self.cache, small_state)
+        if self._fleet is not None:
+            self._fleet.write_slot(self._fleet_row, slot, small_state, row)
+        else:
+            def put(big, small):
+                return big.at[:, slot].set(small[:, row])
+            self.cache = jax.tree.map(put, self.cache, small_state)
         self.pos[slot] = prompt_len
         self.last_tok[slot] = first_tok
         self.slots[slot] = req
@@ -175,21 +367,28 @@ class ReplicaEngine:
     def _admit_batch(self, slots: list, reqs: list, finished: list,
                      bucketed: bool):
         if bucketed:
-            lens = [len(r.prompt) for r in reqs]
+            # a prompt longer than the KV pool keeps only its last
+            # max_seq - 1 tokens (one slot must remain for generation);
+            # copying the raw prompt would overflow the token buffer.
+            prompts = [r.prompt[-(self.max_seq - 1):] for r in reqs]
+            lens = [len(p) for p in prompts]
             sb = min(pow2_bucket(max(lens), self.min_bucket), self.max_seq)
             kb = pow2_bucket(len(reqs))
             toks = np.zeros((kb, sb), np.int32)
             lengths = np.ones(kb, np.int32)    # pad rows: length-1 dummies
-            for i, r in enumerate(reqs):
-                toks[i, :len(r.prompt)] = r.prompt
-                lengths[i] = len(r.prompt)
+            for i, p in enumerate(prompts):
+                toks[i, :len(p)] = p
+                lengths[i] = len(p)
             batch = {"tokens": jnp.asarray(toks),
                      "lengths": jnp.asarray(lengths)}
             logits, small, plen = self._prefill(self.params, batch)
             plen = np.asarray(plen)
         else:
             req = reqs[0]
-            batch = {"tokens": jnp.asarray([req.prompt], jnp.int32)}
+            # same overflow guard as the bucketed path: the KV pool holds
+            # max_seq entries and one must remain for generation
+            prompt = req.prompt[-(self.max_seq - 1):]
+            batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
             extras = getattr(req, "extras", None)
             if extras:
                 batch.update({k: jnp.asarray(v) for k, v in extras.items()})
@@ -224,18 +423,26 @@ class ReplicaEngine:
             self._admit_batch([free.pop(0) for _ in group], group,
                               finished, bucketed=True)
 
-    def step(self, dt: float = 1.0) -> list:
-        """Admit + one decode step for all active slots. Returns finished
-        (including requests that completed at prefill time)."""
+    def begin_step(self, dt: float = 1.0) -> list:
+        """Tick phase 1: advance the clock and admit from the queue. Returns
+        requests that completed at prefill time. The decode phase follows via
+        ``finish_step`` (standalone) or one ``FleetGroup.decode_round``."""
         self.clock += dt
         finished: list = []
         self._admit(finished)
+        return finished
+
+    def finish_step(self) -> list:
+        """Tick phase 2: one decode step for all active slots."""
         if self.n_active == 0:
-            return finished
+            return []
+        if self._fleet is not None:    # device state lives in the fleet slab
+            return self._fleet.decode_round({id(self)})
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         self.steps += 1
+        finished: list = []
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         for slot, req in enumerate(self.slots):
             if req is None:
@@ -249,6 +456,35 @@ class ReplicaEngine:
                 req.finish_time = self.clock
                 finished.append(req)
                 self.slots[slot] = None
+        return finished
+
+    def commit_decode(self, next_toks: np.ndarray, done: np.ndarray) -> list:
+        """Apply one fleet decode result to the host-side slot bookkeeping.
+        ``next_toks``/``done`` are this engine's (B,) rows of the batched
+        sync; the retire mask was already computed on device."""
+        finished: list = []
+        stepped = False
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            stepped = True
+            tok = int(next_toks[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            if done[slot]:
+                req.finish_time = self.clock
+                finished.append(req)
+                self.slots[slot] = None
+        if stepped:
+            self.steps += 1
+        return finished
+
+    def step(self, dt: float = 1.0) -> list:
+        """Admit + one decode step for all active slots. Returns finished
+        (including requests that completed at prefill time)."""
+        finished = self.begin_step(dt)
+        finished.extend(self.finish_step())
         return finished
 
 
@@ -271,10 +507,14 @@ def normalize_fractions(fr: np.ndarray, mask: Optional[np.ndarray] = None
 
 
 class ClusterFrontend:
-    """Routes requests to replicas via balancer fractions (or queue depth)."""
+    """Routes requests to replicas via balancer fractions (or queue depth).
+
+    ``fleet_batch=True`` stacks same-shape replicas into ``FleetGroup``s so a
+    ``step`` issues one decode dispatch per group instead of one per replica
+    (replicas that can't stack — different shapes — keep stepping solo)."""
 
     def __init__(self, replicas: list, policy: str = "lc",
-                 fractions_fn=None, seed: int = 0):
+                 fractions_fn=None, seed: int = 0, fleet_batch: bool = False):
         self.replicas = replicas
         self.policy = policy
         self.fractions_fn = fractions_fn
@@ -282,6 +522,15 @@ class ClusterFrontend:
         self.pending: deque = deque()
         self.finished: list = []
         self._rr = itertools.cycle(range(len(replicas)))
+        self.fleets: dict = {}
+        if fleet_batch:
+            for eng in replicas:
+                g = self.fleets.get(eng.fleet_key)
+                if g is None:
+                    g = self.fleets[eng.fleet_key] = FleetGroup(
+                        eng.model, eng.params, max_batch=eng.max_batch,
+                        max_seq=eng.max_seq, cache_dtype=eng.cache_dtype)
+                g.add(eng)
 
     def submit(self, req: Request):
         self.pending.append(req)
@@ -303,8 +552,17 @@ class ClusterFrontend:
 
     def step(self, dt: float = 1.0):
         self._route()
+        if not self.fleets:
+            for r in self.replicas:
+                self.finished.extend(r.step(dt))
+            return
         for r in self.replicas:
-            self.finished.extend(r.step(dt))
+            self.finished.extend(r.begin_step(dt))
+        for g in self.fleets.values():
+            self.finished.extend(g.decode_round())
+        for r in self.replicas:          # replicas outside any fleet
+            if r._fleet is None:
+                self.finished.extend(r.finish_step())
 
     def run_until_drained(self, max_steps: int = 10_000):
         for _ in range(max_steps):

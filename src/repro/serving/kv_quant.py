@@ -40,9 +40,19 @@ def init_quant_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int):
 
 
 def write_kv_quant(cache, k_new, v_new, pos):
-    """Write one token's k/v (B, 1, G, d) at scalar `pos`."""
+    """Write one token's k/v (B, 1, G, d) at `pos` (scalar, or (B,) for the
+    per-slot vector-``pos`` serving path)."""
     kq, ks = quantize(k_new)
     vq, vs = quantize(v_new)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        rows = jnp.arange(cache["k_q"].shape[0])
+        return {
+            "k_q": cache["k_q"].at[rows, pos].set(kq[:, 0]),
+            "v_q": cache["v_q"].at[rows, pos].set(vq[:, 0]),
+            "k_s": cache["k_s"].at[rows, pos].set(ks[:, 0]),
+            "v_s": cache["v_s"].at[rows, pos].set(vs[:, 0]),
+        }
     upd = jax.lax.dynamic_update_slice
     return {
         "k_q": upd(cache["k_q"], kq, (0, pos, 0, 0)),
