@@ -1,11 +1,20 @@
 """Elastic serving-engine benchmark: the perf trajectory of the request path.
 
-Three phases over real CPU forwards:
+Five phases over real CPU forwards:
 
   * **fleet vs per-replica** — the same saturating workload through 4
     same-model replicas (2 nodes x 2) with fleet-batched decode ON and OFF:
     tokens/sec both ways, the speedup, and ``decode_dispatches_per_tick``
     (fleet mode must issue ONE jitted decode per fleet group per tick);
+  * **fleet prefill A/B** — a cold-queue burst into 4 idle replicas with
+    fleet-batched admission ON and OFF: drain ticks/wall both ways and
+    ``prefill_dispatches`` on the admission tick (fleet mode pays one
+    dispatch per *distinct bucket shape*; the per-replica oracle pays one
+    per admitting replica);
+  * **chunked prefill A/B** — a workload salted with near-``max_seq``
+    prompts, chunking ON and OFF: short-request TTFT p95 (must stay flat)
+    and the p95 per-tick wall time (a single-shot long prefill stalls the
+    whole tick — the decode-TBT tail chunking is meant to bound);
   * **tick-cost scaling** — saturated steps/sec at fleet sizes 1/2/4/8 on
     one node (a fleet-batched hot loop should be near-flat: tick cost is one
     dispatch regardless of replica count);
@@ -84,9 +93,10 @@ def bench_fleet_vs_loop(model, params, cfg) -> dict:
             est_tokens=FLEET_N_NEW)
 
     loop_fe, fleet_fe = make_fe(False), make_fe(True)
-    for fe in (loop_fe, fleet_fe):       # warm compiles + fill slots
-        for _ in range(6):
-            fe.tick(FLEET_RATE)
+    for fe in (loop_fe, fleet_fe):       # warm compiles + fill slots: long
+        for _ in range(30):              # enough to hit every admission
+            fe.tick(FLEET_RATE)          # batch/bucket shape (XLA compiles
+                                         # are ~1s each, 500x a steady tick)
     wall = {False: 0.0, True: 0.0}
     toks = {False: 0, True: 0}
     disp, groups = 0, 0
@@ -109,6 +119,144 @@ def bench_fleet_vs_loop(model, params, cfg) -> dict:
         "fleet_speedup": round(fleet_tps / max(loop_tps, 1e-9), 2),
         "decode_dispatches_per_tick": round(disp / max(groups, 1), 3),
     }
+
+
+PREFILL_BURST = 32       # cold-queue burst size (admission-bound regime)
+
+
+def bench_fleet_prefill(model, params, cfg) -> dict:
+    """Cold-queue drain A/B at 4 replicas: fleet-batched admission on/off.
+
+    Burst prompts land in one pow2 length bucket, so fleet mode pays one
+    vmapped prefill dispatch per distinct (kb, sb) shape per tick while the
+    per-replica oracle pays one per admitting replica. Paired/interleaved
+    bursts so machine noise hits both modes equally."""
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    def make_fe(fp):
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid)
+        return ElasticClusterFrontend(
+            mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+            seed=0, est_tokens=N_NEW, fleet_prefill=fp)
+
+    fes = {True: make_fe(True), False: make_fe(False)}
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(5, 9))).tolist()
+               for _ in range(PREFILL_BURST)]
+    for fe in fes.values():                  # warm ALL admission shapes
+        for burst in (len(prompts), 20, 9):  # (full + partial bursts cover
+            for i in range(burst):           # the pow2 batch ladder; an XLA
+                fe.submit(Request(1000 + i, list(prompts[i]),  # compile is
+                                  max_new_tokens=2))           # ~1s, 500x a
+            fe.run_until_drained()                             # warm tick)
+    walls = {True: [], False: []}
+    ticks = {True: 0, False: 0}
+    disp = {True: 0, False: 0}
+    admit_ticks = {True: 0, False: 0}
+    rounds = 6
+    for rd in range(rounds):                 # interleaved cold bursts
+        for key, fe in fes.items():
+            for i, p in enumerate(prompts):
+                fe.submit(Request(rd * 100 + i, list(p), max_new_tokens=2))
+            t0 = time.perf_counter()
+            for _ in range(200):
+                m = fe.tick(0.0)
+                ticks[key] += 1
+                if m["prefill_dispatches"]:
+                    disp[key] += m["prefill_dispatches"]
+                    admit_ticks[key] += 1
+                if not fe.pending and all(n.unfinished() == 0
+                                          for n in fe.nodes):
+                    break
+            walls[key].append(time.perf_counter() - t0)
+    # median round: a single straggler XLA retrace (~1s) would swamp a
+    # ~20ms drain and invert the comparison
+    med = {k: float(np.median(v)) for k, v in walls.items()}
+    return {
+        "prefill_dispatches_per_tick_fleet":
+            round(disp[True] / max(admit_ticks[True], 1), 3),
+        "prefill_dispatches_per_tick_loop":
+            round(disp[False] / max(admit_ticks[False], 1), 3),
+        "cold_drain_ticks_fleet": round(ticks[True] / rounds, 2),
+        "cold_drain_ticks_loop": round(ticks[False] / rounds, 2),
+        "cold_drain_wall_s_fleet": round(med[True], 4),
+        "cold_drain_wall_s_loop": round(med[False], 4),
+        "cold_drain_speedup": round(med[False] / max(med[True], 1e-9), 2),
+    }
+
+
+CHUNK_LEN = 64           # chunk width for the long-context phase
+CHUNK_MAX_SEQ = 512      # long-context engine shape: a single-shot prefill
+CHUNK_LONG = 500         # of a ~500-token prompt visibly stalls a tick
+LONG_EVERY = 8           # every 8th request is a near-max_seq prompt: the
+                         # ceil(500/64)=8-tick chunk stream fits the
+                         # inter-arrival gap, so chunking smooths a bursty
+                         # spike rather than fighting saturation (under
+                         # saturated long-work arrival no scheduler can
+                         # shrink per-tick work)
+
+
+def bench_chunked(model, params, cfg) -> dict:
+    """Long-prompt workload A/B: chunked admission on/off.
+
+    Short-request TTFT p95 must stay flat, while the p95 per-tick wall time
+    (the decode-TBT proxy: every slot's next token waits for the tick) drops
+    because a long prompt's prefill compute is spread over ceil(len/chunk)
+    ticks instead of spiking one admission call."""
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    def run(chunk_len):
+        rng = np.random.default_rng(0)
+
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=CHUNK_MAX_SEQ, rid=rid,
+                                 chunk_len=chunk_len)
+
+        def rf(rid, tick):
+            if rid % LONG_EVERY == 0:
+                plen = CHUNK_LONG
+            else:
+                plen = int(rng.integers(4, 10))
+            return Request(rid,
+                           rng.integers(1, cfg.vocab_size, plen).tolist(),
+                           max_new_tokens=N_NEW)
+
+        fe = ElasticClusterFrontend(
+            mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+            request_factory=rf, seed=0, est_tokens=N_NEW)
+        for _ in range(24):                  # warm compiles + fill slots
+            fe.tick(1.0)                     # (long: every admission/chunk
+                                             # batch shape must compile
+                                             # before the timed window)
+        tick_wall = []
+        for _ in range(40):
+            t0 = time.perf_counter()
+            fe.tick(1.0)
+            tick_wall.append(time.perf_counter() - t0)
+        fe.run_until_drained()
+        short = [r for r in fe.finished if len(r.prompt) < CHUNK_LONG]
+        longs = [r for r in fe.finished if len(r.prompt) >= CHUNK_LONG]
+        ttft = [r.first_token_time - r.arrival for r in short]
+        lttft = [r.first_token_time - r.arrival for r in longs]
+        return {
+            "ttft_p95_ticks": float(np.percentile(ttft, 95)),
+            "long_ttft_p95_ticks": float(np.percentile(lttft, 95)),
+            "tick_wall_p95_ms":
+                round(float(np.percentile(tick_wall, 95)) * 1e3, 2),
+            "tick_wall_mean_ms":
+                round(float(np.mean(tick_wall)) * 1e3, 2),
+        }
+
+    on, off = run(CHUNK_LEN), run(0)
+    return {"chunked": {"on": on, "off": off,
+                        "chunk_len": CHUNK_LEN,
+                        "tick_wall_p95_ratio_off_over_on":
+                            round(off["tick_wall_p95_ms"] /
+                                  max(on["tick_wall_p95_ms"], 1e-9), 2)}}
 
 
 def bench_tick_scaling(model, params, cfg) -> dict:
@@ -221,6 +369,8 @@ def main() -> list:
 
     blob = {}
     blob.update(bench_fleet_vs_loop(model, params, cfg))
+    blob.update(bench_fleet_prefill(model, params, cfg))
+    blob.update(bench_chunked(model, params, cfg))
     blob.update(bench_tick_scaling(model, params, cfg))
     blob.update(bench_int8_capacity(model))
     blob.update(bench_control_plane(model, params, cfg))
@@ -236,6 +386,15 @@ def main() -> list:
          f"vs {blob['tok_per_s_per_replica_loop']}tok/s loop"),
         ("serve/decode_dispatches_per_tick",
          blob["decode_dispatches_per_tick"] * 1e6, "per fleet group"),
+        ("serve/prefill_dispatches_per_tick",
+         blob["prefill_dispatches_per_tick_fleet"] * 1e6,
+         f"vs {blob['prefill_dispatches_per_tick_loop']} per-replica"),
+        ("serve/cold_drain_speedup_x", blob["cold_drain_speedup"] * 1e6,
+         f"{blob['cold_drain_wall_s_loop']}s loop vs "
+         f"{blob['cold_drain_wall_s_fleet']}s fleet"),
+        ("serve/chunked_tick_wall_p95_ms",
+         blob["chunked"]["on"]["tick_wall_p95_ms"] * 1e6,
+         f"{blob['chunked']['off']['tick_wall_p95_ms']}ms single-shot"),
         ("serve/steps_per_s_8_replicas", 1e6 / max(flat["8"], 1e-9),
          f"1rep={flat['1']}/s 8rep={flat['8']}/s"),
         ("serve/ttft_p95", blob["ttft_p95_ticks"] * 1e6,

@@ -1,0 +1,101 @@
+"""Fast serving smoke for CI: tiny model, 2 replicas, hard asserts.
+
+Guards the two admission-path invariants cheap enough for every PR:
+
+  * **fleet admission dispatch bound** — a cold burst of same-length
+    prompts must admit in <= (distinct bucket shapes) jitted prefill
+    dispatches per tick, never one per replica (here: equal lengths + equal
+    group sizes -> exactly ONE shape -> ONE dispatch, vs 2 for the
+    per-replica oracle);
+  * **TTFT regression bound** — with chunked admission on, short requests
+    sharing the cluster with near-``max_seq`` prompts must keep their TTFT
+    p95 within the same small constant as a short-only run would give
+    (admission is interleaved, not front-loaded).
+
+Exits non-zero on violation (plain asserts); prints the measured numbers so
+CI logs double as a mini-benchmark.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MAX_SEQ = 64
+MAX_BATCH = 4
+CHUNK = 8
+TTFT_P95_BOUND = 4.0     # ticks; generous vs the ~1-2 ticks measured
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    cfg = get_config("granite-3-8b").reduced()
+    model = make_model(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # ---- fleet admission dispatch bound -------------------------------
+    # 2 replicas x full batch of equal-length prompts: every replica
+    # admits a (kb=4, sb=8) group -> ONE distinct bucket shape
+    prompts = [rng.integers(1, cfg.vocab_size, 6).tolist()
+               for _ in range(2 * MAX_BATCH)]
+
+    def burst_fe(fp):
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid)
+        fe = ElasticClusterFrontend(mk, 1, initial_replicas=2,
+                                    max_replicas_per_node=2, seed=0,
+                                    fleet_prefill=fp)
+        for i, p in enumerate(prompts):
+            fe.submit(Request(i, list(p), max_new_tokens=3))
+        return fe, fe.tick(0.0)
+
+    fe_on, m_on = burst_fe(True)
+    fe_off, m_off = burst_fe(False)
+    distinct_shapes = 1
+    print(f"[smoke] admission tick prefill_dispatches: "
+          f"fleet={m_on['prefill_dispatches']} "
+          f"per-replica={m_off['prefill_dispatches']} "
+          f"(distinct bucket shapes={distinct_shapes})")
+    assert m_on["prefill_dispatches"] <= distinct_shapes, \
+        "fleet admission must cost <= one dispatch per distinct bucket shape"
+    assert m_off["prefill_dispatches"] >= 2, \
+        "per-replica oracle should pay one dispatch per admitting replica"
+    fe_on.run_until_drained()
+    fe_off.run_until_drained()
+    snap = lambda fe: sorted((r.rid, tuple(r.output)) for r in fe.finished)
+    assert snap(fe_on) == snap(fe_off), "fleet admission changed streams"
+
+    # ---- chunked-admission TTFT bound ---------------------------------
+    def mk_chunk(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid, chunk_len=CHUNK)
+
+    def rf(rid, tick):
+        plen = MAX_SEQ - 2 if rid % 4 == 0 else int(rng.integers(4, 10))
+        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=4)
+
+    fe = ElasticClusterFrontend(mk_chunk, 1, initial_replicas=2,
+                                max_replicas_per_node=2, request_factory=rf,
+                                seed=0, est_tokens=4)
+    for _ in range(30):
+        fe.tick(1.0)
+    fe.run_until_drained()
+    short = [r for r in fe.finished if len(r.prompt) < MAX_SEQ - 2]
+    ttft_p95 = float(np.percentile(
+        [r.first_token_time - r.arrival for r in short], 95))
+    print(f"[smoke] chunked run: {len(fe.finished)} requests, "
+          f"short TTFT p95={ttft_p95:.1f} ticks (bound {TTFT_P95_BOUND})")
+    assert ttft_p95 <= TTFT_P95_BOUND, \
+        "chunked admission regressed short-request TTFT"
+    print("[smoke] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,12 @@ Two modes:
 
 Both report prefill retrace counts: prompts are padded to power-of-two
 buckets so the engine compiles O(log max_seq) prefill variants total.
+
+Admission flags: ``--chunk-len N`` streams prompts longer than N in fixed
+chunks interleaved with decode (bounded TTFT/TBT tail); fleet mode batches
+all same-bucket admits across replicas into one jitted prefill per distinct
+bucket shape per tick (``--no-fleet-prefill`` restores per-replica
+admission as the A/B oracle).
 """
 from __future__ import annotations
 
@@ -58,7 +64,8 @@ def run_control_loop(args, cfg, model, params):
         speed = float(rng.choice([0.7, 1.0, 1.4]))
         mb = int(rng.choice([max(2, args.max_batch // 2), args.max_batch]))
         return ReplicaEngine(model, params, max_batch=mb,
-                             max_seq=args.max_seq, rid=rid, speed=speed)
+                             max_seq=args.max_seq, rid=rid, speed=speed,
+                             chunk_len=args.chunk_len)
 
     def request_factory(rid: int, tick: int) -> Request:
         plen = int(rng.integers(2, 12))
@@ -72,7 +79,8 @@ def run_control_loop(args, cfg, model, params):
         max_replicas_per_node=args.max_replicas,
         failure_rate=args.failure_rate, request_factory=request_factory,
         seed=args.seed, est_tokens=est_tokens,
-        fleet_batch=not args.no_fleet)
+        fleet_batch=not args.no_fleet,
+        fleet_prefill=not args.no_fleet_prefill)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -113,7 +121,8 @@ def run_control_loop(args, cfg, model, params):
           f"replicas spawned={fe.replicas_spawned} "
           f"failed={fe.failed_replicas} "
           f"replica-ticks={fe.replica_ticks} "
-          f"decode-dispatches={fe.decode_dispatches()}")
+          f"decode-dispatches={fe.decode_dispatches()} "
+          f"prefill-dispatches={fe.prefill_dispatches()}")
     if done:
         ttft = _percentiles([r.first_token_time - r.arrival for r in done])
         lat = _percentiles([r.finish_time - r.arrival for r in done])
@@ -128,7 +137,8 @@ def run_drain_mode(args, cfg, model, params):
                                       Request, total_prefill_traces)
 
     replicas = [ReplicaEngine(model, params, max_batch=args.max_batch,
-                              max_seq=args.max_seq, rid=i)
+                              max_seq=args.max_seq, rid=i,
+                              chunk_len=args.chunk_len)
                 for i in range(args.replicas)]
     caps = np.ones(args.replicas)
 
@@ -186,6 +196,13 @@ def main():
     ap.add_argument("--no-fleet", action="store_true",
                     help="disable fleet-batched decode (per-replica jit "
                          "dispatch loop; A/B baseline)")
+    ap.add_argument("--no-fleet-prefill", action="store_true",
+                    help="disable fleet-batched admission (per-replica "
+                         "prefill dispatches; A/B baseline)")
+    ap.add_argument("--chunk-len", type=int, default=0,
+                    help="chunked-prefill width: prompts longer than this "
+                         "admit in fixed-size chunks interleaved with decode "
+                         "(0 = single-shot prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

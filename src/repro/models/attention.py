@@ -151,6 +151,45 @@ def prefill_attention(params, x, dims: PaddedDims, cache, *, rope_theta=0.0,
     return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"]), cache
 
 
+def chunk_prefill_attention(params, x, dims: PaddedDims, cache, positions,
+                            lengths, *, rope_theta=0.0):
+    """Continue a prefill one chunk at a time against an existing KV cache.
+
+    x: (B,C,d) chunk activations; ``positions`` (B,C) are per-row absolute
+    cache positions (``offset + arange(C)``) and ``lengths`` (B,) the true
+    (un-padded) token count of each row's chunk. The chunk's K/V are written
+    at those positions (pad columns park at an out-of-bounds index so the
+    scatter drops them), then the chunk queries attend causally over the
+    *full* cache — prefix chunks included — so chunk-by-chunk prefill equals
+    the single-shot forward. Stale cache entries beyond a row's frontier are
+    masked by ``k_pos <= q_pos`` exactly like slot reuse in the decode path.
+    Returns (out (B,C,d), filled cache)."""
+    B, C, _ = x.shape
+    q, k, v = _project_qkv(params, x, x, dims)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    S = cache["k"].shape[1]
+    j = jnp.arange(C, dtype=jnp.int32)
+    wpos = jnp.where(j[None, :] < lengths[:, None], positions, S)
+    rows = jnp.arange(B)[:, None]
+    kc = cache["k"].at[rows, wpos].set(k.astype(cache["k"].dtype),
+                                       mode="drop")
+    vc = cache["v"].at[rows, wpos].set(v.astype(cache["v"].dtype),
+                                       mode="drop")
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bsgqh,btgh->bgqst", q, kc.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    mask = (k_pos[None, None, :] <= positions[:, :, None])[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bgqst,btgh->bsgqh", probs.astype(vc.dtype), vc)
+    ctx = _mask_pad_heads(ctx, dims)
+    ctx = ctx.reshape(B, C, dims.n_q, -1)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"]), {"k": kc, "v": vc}
+
+
 def project_decode_qkv(params, x, dims: PaddedDims, pos, rope_theta):
     """Project the new token's q/k/v with RoPE at `pos` (scalar or (B,))."""
     pos = jnp.asarray(pos, jnp.int32)

@@ -344,3 +344,70 @@ def lm_prefill(params, batch, cfg, dims, *, cache_len: int,
         vq, vs = quantize(new_v)
         return logits, {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}, pos
     return logits, {"k": new_k, "v": new_v}, pos
+
+
+def lm_prefill_chunk(params, cache, tokens, offsets, lengths, cfg, dims, *,
+                     shard_fn=None):
+    """Continue a prefill: run ``tokens`` (B,C) at per-row cache ``offsets``
+    (B,) against an existing KV cache (leaves (L,B,S,G,hd)), writing the
+    chunk's K/V at [offset, offset+length) and attending causally over the
+    whole prefix. ``lengths`` (B,) is each row's true token count within the
+    chunk (rows are right-padded to the fixed chunk width). Returns
+    (last-real-token logits (B,V), cache, pos (B,) = offset+length).
+
+    Chunk-by-chunk equals single-shot prefill exactly: causal attention
+    decomposes over chunks, pad columns never write (parked out of bounds)
+    and stale cache beyond a row's frontier is masked by ``k_pos <= q_pos``.
+    Only the float cache codec is supported (the int8 path quantizes whole
+    prompts at prefill end; the engine routes int8 replicas to single-shot).
+    """
+    assert "k_q" not in cache, "chunked prefill requires a float KV cache"
+    h = params["embed"][tokens]
+    C = tokens.shape[1]
+    posmat = offsets[:, None].astype(jnp.int32) + \
+        jnp.arange(C, dtype=jnp.int32)[None, :]
+    me = cfg.moe_every if "moe_layers" in params else 1
+    n_groups = cfg.num_layers // me
+
+    def sublayer(h, lp, layer_idx, kc_full, vc_full):
+        x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        kc = jax.lax.dynamic_index_in_dim(kc_full, layer_idx, 0, False)
+        vc = jax.lax.dynamic_index_in_dim(vc_full, layer_idx, 0, False)
+        y, filled = attn.chunk_prefill_attention(
+            lp["attn"], x, dims, {"k": kc, "v": vc}, posmat, lengths,
+            rope_theta=cfg.rope_theta)
+        kc_full = jax.lax.dynamic_update_index_in_dim(kc_full, filled["k"],
+                                                      layer_idx, 0)
+        vc_full = jax.lax.dynamic_update_index_in_dim(vc_full, filled["v"],
+                                                      layer_idx, 0)
+        h = h + y
+        h, _ = _ffn_sublayer(lp, h, cfg, shard_fn)
+        if shard_fn is not None:
+            h = shard_fn(h, "act_btd")
+        return h, kc_full, vc_full
+
+    def body(carry, xs):
+        h, kc_full, vc_full = carry
+        lps, g = xs
+        for j in range(me):
+            lp = lps if me == 1 else (
+                lps[0] if j == 0
+                else jax.tree.map(lambda x: x[j - 1], lps[1]))
+            h, kc_full, vc_full = sublayer(h, lp, g * me + j, kc_full,
+                                           vc_full)
+        return (h, kc_full, vc_full), None
+
+    if me == 1:
+        xs = (params["layers"], jnp.arange(n_groups))
+    else:
+        xs = ((params["moe_layers"], params["dense_layers"]),
+              jnp.arange(n_groups))
+    (h, new_k, new_v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]), xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    idx = (lengths - 1).astype(jnp.int32)
+    last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = last @ head if head is not None else last @ params["embed"].T
+    pos = (offsets + lengths).astype(jnp.int32)
+    return logits, {"k": new_k, "v": new_v}, pos

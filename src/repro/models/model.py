@@ -157,6 +157,27 @@ class Model:
                                          shard_fn=shard_fn)
         raise ValueError(c.family)
 
+    def prefill_chunk(self, params, state, tokens, offsets, lengths,
+                      shard_fn=None):
+        """Advance a chunked prefill: run ``tokens`` (B,C) at per-row cache
+        ``offsets`` against the carried serve state (KV cache rows for
+        dense/moe, SSM/conv/attn state for ssm/hybrid). Returns
+        (last-real-token logits, state, pos). Chunk-by-chunk equals the
+        single-shot ``prefill`` exactly; vlm/audio requests carry per-request
+        extras and stay on the exact-length single-shot path, and moe is
+        rejected because expert capacity would scale with the chunk rather
+        than the full prompt (per-chunk routing drops differ from
+        single-shot — the same reason the engine keeps moe on exact-length
+        admission)."""
+        c, d = self.cfg, self.dims
+        if c.family == "dense":
+            return lm.lm_prefill_chunk(params, state, tokens, offsets,
+                                       lengths, c, d, shard_fn=shard_fn)
+        if c.family in ("ssm", "hybrid"):
+            return ssm_lm.ssm_prefill_chunk(params, state, tokens, offsets,
+                                            lengths, c, d, shard_fn=shard_fn)
+        raise ValueError(f"chunked prefill unsupported for {c.family!r}")
+
     def decode(self, params, state, tokens, pos, shard_fn=None):
         c, d = self.cfg, self.dims
         if c.family in ("dense", "moe", "vlm"):

@@ -143,30 +143,42 @@ def ssd_decode_step(state, x, dt, A, Bm, Cm):
 
 
 # -------------------------------------------------------------- full block
-def causal_conv(x, w, b):
-    """Depthwise causal conv. x: (B,T,C); w: (W,C)."""
+def causal_conv(x, w, b, left=None):
+    """Depthwise causal conv. x: (B,T,C); w: (W,C). ``left`` (B,W-1,C) is the
+    raw window carried from a previous chunk (chunked prefill); None means a
+    fresh sequence (zero left context)."""
     W = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    if left is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([left.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
     return out + b[None, None, :]
 
 
-def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
-                   shard_fn=None, lengths=None):
+def mamba2_forward(params, x, cfg, *, init_state=None, conv_state=None,
+                   return_state=False, shard_fn=None, lengths=None):
     """Full-sequence Mamba-2 block. x: (B,T,d_model).
 
     ``lengths`` (B,) marks true per-row sequence lengths when x is
     right-padded: padded steps get dt=0 (decay 1, zero input — exactly inert,
     the same trick ``ssd_chunked`` uses for chunk padding), and the decode
     conv state is gathered from the last ``conv_width-1`` *real* positions,
-    so the returned state matches an unpadded forward bit-for-bit."""
+    so the returned state matches an unpadded forward bit-for-bit.
+
+    ``init_state`` / ``conv_state`` continue a sequence from a previous
+    chunk (chunked prefill): ``init_state`` (B,H,P,N) seeds the SSM scan and
+    ``conv_state`` (B,W-1,C) is the carried raw conv window (same layout the
+    decode path keeps), so running a prompt chunk-by-chunk reproduces the
+    single-shot forward exactly."""
     d_inner, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
     H, P = cfg.ssm_heads, cfg.ssm_head_dim
     proj = x @ params["in_proj"]                              # (B,T,din_proj)
     z = proj[..., :d_inner]
     xBC_raw = proj[..., d_inner:d_inner + d_inner + 2 * G * N]
     dt_raw = proj[..., -H:]
-    xBC = silu(causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    xBC = silu(causal_conv(xBC_raw, params["conv_w"], params["conv_b"],
+                           left=conv_state))
     xs = xBC[..., :d_inner]
     Bm = xBC[..., d_inner:d_inner + G * N].reshape(*x.shape[:2], G, N)
     Cm = xBC[..., d_inner + G * N:].reshape(*x.shape[:2], G, N)
@@ -184,7 +196,20 @@ def mamba2_forward(params, x, cfg, *, init_state=None, return_state=False,
     out = y @ params["out_proj"]
     if return_state:
         W = cfg.ssm_conv_width
-        if lengths is None:
+        if conv_state is not None:
+            # carried window: the cumulative raw sequence is [carry | chunk],
+            # so the next window is its last W-1 real rows — always in bounds
+            # (the carry supplies the left context even for tiny chunks).
+            window = jnp.concatenate(
+                [conv_state.astype(xBC_raw.dtype), xBC_raw], axis=1)
+            if lengths is None:
+                conv_tail = window[:, -(W - 1):, :]
+            else:
+                idx = lengths[:, None].astype(jnp.int32) + \
+                    jnp.arange(W - 1, dtype=jnp.int32)[None, :]
+                conv_tail = jnp.take_along_axis(
+                    window, idx[:, :, None], axis=1)
+        elif lengths is None:
             conv_tail = xBC_raw[:, -(W - 1):, :]  # raw window for decode conv
             if conv_tail.shape[1] < W - 1:        # prompt shorter than window
                 conv_tail = jnp.pad(

@@ -236,3 +236,75 @@ def ssm_prefill(params, batch, cfg: ArchConfig, dims: PaddedDims, *,
     if hybrid:
         new_state["attn_k"], new_state["attn_v"] = ak, av
     return logits, new_state, pos
+
+
+def ssm_prefill_chunk(params, state, tokens, offsets, lengths,
+                      cfg: ArchConfig, dims: PaddedDims, *, shard_fn=None):
+    """Continue a prefill one chunk at a time: ``state`` is the serve state
+    left by earlier chunks (zeros for the first), ``tokens`` (B,C) the next
+    chunk right-padded to the fixed width with ``lengths`` (B,) true counts,
+    and ``offsets`` (B,) the absolute position of each row's chunk start.
+
+    The SSM scan seeds from the carried per-layer state, the conv window
+    rides the carried raw tail (the same layout ``mamba2_decode`` keeps), and
+    hybrid attention layers write/read the per-invocation KV caches at the
+    chunk's absolute positions — so chunk-by-chunk equals single-shot prefill
+    exactly (pad steps are dt=0 inert). Returns (last-real-token logits,
+    state, pos (B,) = offset+length)."""
+    h = params["embed"][tokens]
+    C = tokens.shape[1]
+    hybrid = cfg.family == "hybrid"
+    ak, av = state.get("attn_k"), state.get("attn_v")
+    posmat = offsets[:, None].astype(jnp.int32) + \
+        jnp.arange(C, dtype=jnp.int32)[None, :]
+    conv_dtype = state["conv"].dtype
+
+    def body(carry, xs):
+        h, ak, av = carry
+        lp, ssm_st, conv_st, idx = xs
+        if hybrid:
+            inv = idx // cfg.attn_every
+
+            def with_attn(args):
+                h, ak, av = args
+                sp = params["shared_attn"]
+                x = rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+                kc = jax.lax.dynamic_index_in_dim(ak, inv, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(av, inv, 0, keepdims=False)
+                y, filled = attn.chunk_prefill_attention(
+                    sp["attn"], x, dims, {"k": kc, "v": vc}, posmat, lengths,
+                    rope_theta=cfg.rope_theta)
+                h = h + y
+                h = h + mlp_apply(sp["mlp"],
+                                  rms_norm(h, sp["ffn_norm"], cfg.norm_eps),
+                                  cfg.activation)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, filled["k"],
+                                                         inv, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, filled["v"],
+                                                         inv, 0)
+                return h, ak, av
+
+            h, ak, av = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                     lambda a: a, (h, ak, av))
+        y, st = mamba2_forward(lp["mamba"],
+                               rms_norm(h, lp["norm"], cfg.norm_eps), cfg,
+                               init_state=ssm_st, conv_state=conv_st,
+                               lengths=lengths, return_state=True,
+                               shard_fn=shard_fn)
+        h = h + y
+        return (h, ak, av), (st["ssm"], st["conv"].astype(conv_dtype))
+
+    (h, ak, av), (ssm_states, conv_states) = jax.lax.scan(
+        body, (h, ak, av),
+        (params["layers"], state["ssm"], state["conv"],
+         jnp.arange(cfg.num_layers)))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    idx = (lengths - 1).astype(jnp.int32)
+    last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    head = params.get("lm_head")
+    logits = last @ head if head is not None else last @ params["embed"].T
+    pos = (offsets + lengths).astype(jnp.int32)
+    new_state = {"ssm": ssm_states, "conv": conv_states}
+    if hybrid:
+        new_state["attn_k"], new_state["attn_v"] = ak, av
+    return logits, new_state, pos

@@ -40,6 +40,17 @@ parity oracle). ``metrics()['decode_dispatches']`` counts this tick's
 dispatches; the fleet path also feeds the measured per-replica service-rate
 EMA (``metrics()['service_rate']``) that the control plane hands to the
 GPSO planner once warm.
+
+**Fleet-batched admission** (default with ``fleet_batch``): each round,
+every stepping member *plans* its admissions on the host and the group
+coordinator batches them — one jitted ``fleet_prefill`` per distinct pow2
+length bucket across ALL nodes, writing admit rows
+straight into the fleet slab, plus one ``fleet_chunk`` dispatch advancing
+every mid-chunk long prompt (``ReplicaEngine(chunk_len=...)``). Cold-queue
+admission cost is therefore O(distinct bucket shapes) per tick instead of
+O(replicas). ``metrics()['prefill_dispatches']`` counts this tick's
+admission dispatches (mirroring ``decode_dispatches``); set
+``fleet_prefill=False`` to keep per-replica admission as the A/B oracle.
 """
 from __future__ import annotations
 
@@ -80,7 +91,8 @@ class ElasticClusterFrontend:
                  failure_rate: float = 0.0,
                  request_factory: Optional[Callable[[int, int], Request]] = None,
                  tick_seconds: float = 1.0, seed: int = 0,
-                 est_tokens: float = 8.0, fleet_batch: bool = True):
+                 est_tokens: float = 8.0, fleet_batch: bool = True,
+                 fleet_prefill: bool = True):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
         self.provisioning_delay = int(provisioning_delay)
@@ -89,6 +101,7 @@ class ElasticClusterFrontend:
         self.request_factory = request_factory
         self.tick_seconds = tick_seconds
         self.fleet_batch = fleet_batch
+        self.fleet_prefill = fleet_prefill and fleet_batch
         self.rng = np.random.default_rng(seed)
         self.nodes = [_Node() for _ in range(num_nodes)]
         self._rid = 0                # engine ids (replicas ever created)
@@ -106,7 +119,9 @@ class ElasticClusterFrontend:
         self._kernel_objs: dict = {}
         self._fleets: dict = {}      # fleet_key -> FleetGroup (spans nodes)
         self._tick_dispatches = 0    # decode dispatches issued this tick
+        self._tick_prefill_dispatches = 0  # admission dispatches this tick
         self._retired_dispatches = 0  # dispatch counts of evicted groups
+        self._retired_prefill_dispatches = 0  # of evicted groups + engines
         self._srv_rate: Optional[float] = None  # per-replica req/tick EMA
         self._srv_obs = 0            # ticks the EMA has been fed
         for node in self.nodes:
@@ -146,19 +161,36 @@ class ElasticClusterFrontend:
             # evict the empty group so its high-water-mark slab doesn't pin
             # device memory forever (a re-spawn re-allocates from zeros)
             self._retired_dispatches += g.dispatches
+            self._retired_prefill_dispatches += g.prefill_dispatches
             self._fleets = {k: v for k, v in self._fleets.items()
                             if v is not g}
 
     def prefill_retraces(self) -> int:
-        """Prefill compilations across every replica ever spawned (kernels
-        are shared per model config, so retired replicas still count)."""
-        return sum(k.traces for k in self._kernel_objs.values())
+        """Prefill-side compilations across every replica ever spawned —
+        one deduped accounting over the bucketed, fleet-batched and chunked
+        kernel variants (kernels are shared per model config, so retired
+        replicas still count)."""
+        return sum(k.prefill_traces for k in self._kernel_objs.values())
+
+    def serve_kernel_traces(self) -> int:
+        """Compilations across *every* serve-kernel variant (prefill +
+        decode + fleet + chunk), deduped the same way."""
+        return sum(k.total_traces for k in self._kernel_objs.values())
 
     def decode_dispatches(self) -> int:
         """Total jitted fleet decode dispatches issued (fleet mode),
         including groups since evicted."""
         return self._retired_dispatches + \
             sum(g.dispatches for g in self._fleets.values())
+
+    def prefill_dispatches(self) -> int:
+        """Total jitted admission dispatches issued: per-engine bucketed /
+        exact-length / chunk calls plus the fleet-batched prefill and chunk
+        dispatches, including retired engines and evicted groups."""
+        live = sum(e.prefill_dispatches
+                   for n in self.nodes for e in n.live + n.draining)
+        return self._retired_prefill_dispatches + live + \
+            sum(g.prefill_dispatches for g in self._fleets.values())
 
     @property
     def replicas(self) -> list:
@@ -261,6 +293,7 @@ class ElasticClusterFrontend:
         node.live.remove(eng)
         node.credit.pop(id(eng), None)
         self._leave_fleet(eng, restore=False)   # row dropped, not unstacked
+        self._retired_prefill_dispatches += eng.prefill_dispatches
         self.failed_replicas += 1
 
     def _inject_failures(self):
@@ -329,6 +362,7 @@ class ElasticClusterFrontend:
         self._route_pending()
         finished_now: list = []
         self._tick_dispatches = 0
+        prefill_before = self.prefill_dispatches()
         stepping: list = []          # (engine, n_substeps) across ALL nodes
         for node in self.nodes:
             self._dispatch(node)
@@ -343,22 +377,28 @@ class ElasticClusterFrontend:
                 stepping.append((eng, n_sub))
         # sub-step rounds: round r advances every engine with n_sub > r, so
         # a homogeneous-speed cluster runs exactly one round and each fleet
-        # group issues ONE decode dispatch for the whole tick. Engines are
-        # independent within a tick (node queues were dispatched above), so
-        # round interleaving matches stepping them one by one.
+        # group issues ONE decode dispatch (plus, under fleet admission, one
+        # prefill dispatch per distinct bucket shape) for the whole tick.
+        # Engines are independent within a tick (node queues were dispatched
+        # above), so round interleaving matches stepping them one by one.
         max_sub = max((n for _, n in stepping), default=0)
         for r in range(max_sub):
             round_engines = [(e, n) for e, n in stepping if n > r]
-            for eng, n in round_engines:
-                finished_now.extend(eng.begin_step(dt=1.0 / n))
             ids = {id(e) for e, _ in round_engines}
+            for eng, n in round_engines:
+                finished_now.extend(eng.begin_step(
+                    dt=1.0 / n,
+                    admit=eng._fleet is None or not self.fleet_prefill))
+            if self.fleet_prefill:
+                for g in self._fleets.values():
+                    finished_now.extend(g.admit_round(ids))
             for g in self._fleets.values():
                 before = g.dispatches
                 finished_now.extend(g.decode_round(ids))
                 self._tick_dispatches += g.dispatches - before
             for eng, _ in round_engines:     # engines outside any fleet
                 if eng._fleet is None:
-                    if eng.n_active:
+                    if eng.n_decoding:
                         self._tick_dispatches += 1
                     finished_now.extend(eng.finish_step())
         for node in self.nodes:
@@ -368,7 +408,11 @@ class ElasticClusterFrontend:
                     node.credit.pop(id(eng), None)
                     # retired-empty: nothing worth unstacking from the slab
                     self._leave_fleet(eng, restore=False)
+                    self._retired_prefill_dispatches += \
+                        eng.prefill_dispatches
             self.replica_ticks += len(node.live)
+        self._tick_prefill_dispatches = \
+            self.prefill_dispatches() - prefill_before
         self.finished.extend(finished_now)
         self._m = self._compute_metrics(finished_now, arrival_rate)
         return self._m
@@ -443,6 +487,7 @@ class ElasticClusterFrontend:
                 [len(n.live) for n in self.nodes], np.int32),
             "replica_ticks": int(sum(len(n.live) for n in self.nodes)),
             "decode_dispatches": int(self._tick_dispatches),
+            "prefill_dispatches": int(self._tick_prefill_dispatches),
             "fleet_groups": int(sum(1 for g in self._fleets.values()
                                     if len(g))),
             "service_rate": self.service_rate,

@@ -8,10 +8,46 @@ compiles O(log max_seq · log max_batch) times total instead of once per
 distinct prompt length (``prefill_traces`` counts actual retraces). Padded
 prefill is exact for dense/ssm/hybrid: causal attention masks trailing pads
 and the SSM path zeroes dt at pad positions (see
-``models.ssd.mamba2_forward``). MoE buckets too but is exact only when no
-expert-capacity drops occur (capacity scales with the padded length).
+``models.ssd.mamba2_forward``). MoE replicas default to the exact-length
+single-admit path instead: expert-capacity routing sees the pad tokens, so a
+padded bucket is exact only when no capacity drops occur (capacity scales
+with the padded length and the whole admit batch — a drop pattern the
+per-prompt oracle never sees). Opt back into buckets with
+``bucket_prompts=True`` when approximate routing is acceptable.
 Prompts longer than ``max_seq - 1`` are truncated to their last
 ``max_seq - 1`` tokens at admission (the KV pool can never overflow).
+
+**Admission pipeline** (bucket → chunk → fleet slab). Each tick every
+stepping replica *plans* admission from its queue without dispatching
+(``plan_admission``): chunk-eligible prompts (longer than ``chunk_len``,
+dense/ssm/hybrid, f32 cache) reserve a slot and a chunk cursor; requests
+carrying per-request extras (vlm patches, audio frames) become exact-length
+single admits; everything else groups into one pow2 ``(bucket_batch,
+bucket_len)`` prefill per replica. Execution then depends on the mode:
+
+  * **standalone** — the replica dispatches its own bucketed prefill and one
+    batched chunk step (``prefill_dispatches`` counts jitted admission
+    dispatches per replica);
+  * **fleet-batched prefill** — a ``FleetGroup`` gathers every member's
+    bucketed groups, flattens rows of the same pow2 length bucket across ALL
+    members and runs ONE jitted ``fleet_prefill`` per *distinct bucket
+    shape* per tick: the batched prefill writes each admit row's KV/state
+    directly into the donated fleet slab on device (no host-side
+    ``write_slot`` copies), and all members' due chunk rows advance in ONE
+    ``fleet_chunk`` dispatch. Admission cost becomes O(distinct bucket
+    shapes) per tick instead of O(replicas);
+    ``FleetGroup.prefill_dispatches`` mirrors ``decode_dispatches``.
+
+**Chunked prefill.** Prompts longer than ``chunk_len`` stream in fixed-size
+chunks, one per engine step, interleaved with decode rounds: dense chunks
+attend at a cache offset over the already-filled prefix
+(``models.attention.chunk_prefill_attention``), ssm/hybrid chunks carry the
+SSM state and raw conv window across chunks (``mamba2_forward`` with
+``init_state``/``conv_state``). A mid-chunk slot is excluded from decode via
+the ``hold`` mask fused into the decode kernels (its carried state must not
+be advanced by garbage decode steps), so a long prompt admits over
+ceil(len/chunk) ticks while decode TBT for the other slots stays one bounded
+dispatch per tick. Chunk-by-chunk equals single-shot prefill exactly.
 
 **Fleet-batched decode.** Slot bookkeeping (the ``Request`` objects, host
 ``pos``/``last_tok`` mirrors, queues, clocks) lives on the engine; the device
@@ -34,7 +70,10 @@ the fleet path.
 ``cache_dtype`` accepts the string ``"int8"`` for dense/moe/vlm replicas:
 the KV pool is then stored int8 with per-(token, head) f32 absmax scales
 (``repro.serving.kv_quant``), roughly 3.6x the slot capacity of an fp32 pool
-for the same bytes.
+for the same bytes. Non-f32 caches stay on single-shot prefill (the int8
+codec quantizes whole prompts at prefill end, and a bf16 pool would round
+the carried chunk state that single-shot keeps unrounded), so ``chunk_len``
+is ignored there.
 
 ``ClusterFrontend`` stitches several replicas together behind a balancer
 policy — the live counterpart of the fluid simulator. The node-structured
@@ -55,10 +94,18 @@ import numpy as np
 from repro.models.model import Model
 
 # families whose prefill accepts per-row ``lengths`` (bucketed prompts are
-# exact). audio prefill is driven by encoder frames and stays exact-length;
-# vlm requests carry patch-embed extras, which take the single-admit path
-# below (batching per-request extras is future work).
-_BUCKET_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+# exact). moe is deliberately absent: expert capacity scales with the padded
+# bucket, so drops can differ from the exact-length oracle (see module
+# docstring). audio prefill is driven by encoder frames and stays
+# exact-length; vlm requests carry patch-embed extras, which take the
+# single-admit path below (batching per-request extras is future work).
+_BUCKET_FAMILIES = ("dense", "ssm", "hybrid")
+# families with a chunked-prefill continuation kernel (cache-offset attention
+# for dense, carried ssm/conv state for ssm/hybrid). moe is excluded by
+# default for the same capacity reason as bucketing.
+_CHUNK_FAMILIES = ("dense", "ssm", "hybrid")
+# kernel variants whose compilations count as prefill retraces
+_PREFILL_VARIANTS = ("prefill", "fleet_prefill", "chunk", "fleet_chunk")
 
 
 def pow2_bucket(n: int, lo: int = 1) -> int:
@@ -73,13 +120,29 @@ class _ServeKernels:
     """Shared jit'd prefill/decode for one (model, max_seq, cache_dtype):
     replicas of the same model reuse compiled code instead of re-jitting on
     every cold start (a scale-up would otherwise stall the tick loop on XLA
-    compilation of identical shapes). ``traces`` counts actual prefill
-    compilations across every replica that shares this object. ``fleet`` /
+    compilation of identical shapes). ``trace_counts`` counts actual
+    compilations per kernel variant across every replica that shares this
+    object — one deduped accounting covering prefill, decode, the fleet
+    decode variants and the fleet/chunk prefill variants. ``fleet`` /
     ``fleet_masked`` advance a whole stacked fleet of replicas in one
     dispatch with sampling and retire decisions fused on device (the masked
     variant leaves non-stepping rows' cache untouched, for heterogeneous
-    replica speeds)."""
-    __slots__ = ("prefill", "decode", "fleet", "fleet_masked", "traces")
+    replica speeds); ``fleet_prefill`` / ``fleet_chunk`` are the admission
+    twins writing prefill state straight into the fleet slab."""
+    __slots__ = ("prefill", "decode", "decode_hold", "fleet", "fleet_hold",
+                 "fleet_masked", "fleet_masked_hold", "fleet_prefill",
+                 "chunk", "fleet_chunk", "trace_counts")
+
+    @property
+    def prefill_traces(self) -> int:
+        """Compilations of the prefill-side variants (bucketed, fleet,
+        chunked) — the retrace-bound currency."""
+        return sum(self.trace_counts.get(v, 0) for v in _PREFILL_VARIANTS)
+
+    @property
+    def total_traces(self) -> int:
+        """Compilations across every serve-kernel variant."""
+        return sum(self.trace_counts.values())
 
 
 def _dtype_name(cache_dtype) -> str:
@@ -99,49 +162,209 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
     if k is not None:
         return k
     k = _ServeKernels()
-    k.traces = 0
+    k.trace_counts = {}
+
+    def _count(name):
+        # runs at trace time only (python side effect inside the traced fn)
+        k.trace_counts[name] = k.trace_counts.get(name, 0) + 1
 
     def _prefill_fn(p, batch):
-        k.traces += 1              # runs at trace time only
+        _count("prefill")
         return model.prefill(p, batch, cache_len=max_seq,
                              cache_dtype=cache_dtype)
 
-    def _fleet_fn(p, slab, toks, pos, rem, eos, active):
+    def _decode_fn(p, st, tok, pos):
+        _count("decode")
+        return model.decode(p, st, tok, pos)
+
+    def _decode_hold_fn(p, st, tok, pos, hslots):
+        """Standalone decode that leaves the ``hslots`` slots' state
+        untouched (mid-chunk-prefill slots must not be advanced by garbage
+        tokens). The held slots are gathered before the step and scattered
+        back after — touching K slot rows instead of select-copying the
+        whole pool (pad entries are out-of-bounds: gather clips, scatter
+        drops)."""
+        _count("decode_hold")
+        held = jax.tree.map(lambda t: jnp.take(t, hslots, axis=1), st)
+        logits, new = model.decode(p, st, tok, pos)
+        new = jax.tree.map(
+            lambda t, h: t.at[:, hslots].set(h, mode="drop"), new, held)
+        return logits, new
+
+    def _fleet_core(p, slab, toks, pos, rem, eos, active, rows=None,
+                    held=None):
         """One dispatch for a stacked fleet. slab: cache pytree with a
         leading fleet axis; toks/pos/rem/eos/active: (F, B). Returns the
         next greedy token per slot, the fused retire mask, and the advanced
         slab. The retire rule is the exact device twin of the host rule in
         ``ReplicaEngine.finish_step``: after appending this token a slot is
         done when it reached max_new_tokens (rem <= 1), emitted EOS, or its
-        next write index would hit the end of the cache."""
+        next write index would hit the end of the cache. ``held``
+        ((hrows, hslots) index vectors for mid-chunk-prefill slots) keeps
+        those slots' state bit-for-bit by gather-before / scatter-after —
+        touching K slot rows, NOT select-copying the whole slab; with
+        ``rows`` (F,) only those fleet rows advance at all (hetero speeds).
+        Each mask combination is its own kernel variant so the common
+        all-decode path keeps the pure donated in-place update."""
+        if held is not None:
+            hrows, hslots = held
+            kept = jax.tree.map(lambda s: s[hrows, :, hslots], slab)
         logits, new_slab = jax.vmap(
             lambda c, t, q: model.decode(p, c, t, q))(slab, toks[..., None],
                                                       pos)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         done = active & ((rem <= 1) | (nxt == eos)
                          | (pos + 1 >= max_seq - 1))
+
+        if rows is not None:
+            def sel(old, new):
+                rm = rows.reshape((rows.shape[0],) + (1,) * (old.ndim - 1))
+                return jnp.where(rm, new, old)
+
+            new_slab = jax.tree.map(sel, slab, new_slab)
+            done = done & rows[:, None]
+        if held is not None:
+            new_slab = jax.tree.map(
+                lambda s, h: s.at[hrows, :, hslots].set(h, mode="drop"),
+                new_slab, kept)
         return nxt, done, new_slab
+
+    def _fleet_fn(p, slab, toks, pos, rem, eos, active):
+        _count("fleet")
+        return _fleet_core(p, slab, toks, pos, rem, eos, active)
+
+    def _fleet_hold_fn(p, slab, toks, pos, rem, eos, active, hrows, hslots):
+        _count("fleet_hold")
+        return _fleet_core(p, slab, toks, pos, rem, eos, active,
+                           held=(hrows, hslots))
 
     def _fleet_masked_fn(p, slab, toks, pos, rem, eos, active, rows):
         """Fleet dispatch where only ``rows`` (F,) advance — other rows keep
         their cache bit-for-bit (an SSM state must not step twice)."""
-        nxt, done, new_slab = _fleet_fn(p, slab, toks, pos, rem, eos, active)
+        _count("fleet_masked")
+        return _fleet_core(p, slab, toks, pos, rem, eos, active, rows=rows)
 
-        def sel(old, new):
-            m = rows.reshape((rows.shape[0],) + (1,) * (old.ndim - 1))
-            return jnp.where(m, new, old)
+    def _fleet_masked_hold_fn(p, slab, toks, pos, rem, eos, active, rows,
+                              hrows, hslots):
+        _count("fleet_masked_hold")
+        return _fleet_core(p, slab, toks, pos, rem, eos, active, rows=rows,
+                           held=(hrows, hslots))
 
-        return nxt, done & rows[:, None], jax.tree.map(sel, slab, new_slab)
+    def _fleet_prefill_fn(p, slab, toks, lens, rows, slots):
+        """ONE admission dispatch for every same-bucket-length admit across
+        the fleet: toks (K, sb) flattens every member's admit rows of the
+        same pow2 length bucket into one batch (K itself pow2-padded), runs
+        the exact same row-independent prefill as the standalone path, and
+        scatters each row's KV/state straight into the donated slab at
+        (fleet row ``rows[k]``, slot ``slots[k]``). Pad rows carry
+        out-of-bounds indices so their writes drop. Keeping the batch flat
+        (rather than vmapping per-member groups) keeps the retrace space at
+        O(log(F·max_batch) · log max_seq) — a stacked (groups, kb, sb)
+        signature would recompile for every fleet-size/group-count combo.
+        Returns the greedy first token and per-row prompt length, (K,)
+        each."""
+        _count("fleet_prefill")
+        logits, small, plen = model.prefill(
+            p, {"tokens": toks, "lengths": lens}, cache_len=max_seq,
+            cache_dtype=cache_dtype)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def scatter(s, sm):
+            return s.at[rows, :, slots].set(
+                sm.swapaxes(0, 1).astype(s.dtype), mode="drop")
+
+        return first, plen.astype(jnp.int32), jax.tree.map(scatter, slab,
+                                                           small)
+
+    def _chunk_core(state, toks, offs, lens, fresh, p):
+        """Shared chunk step on gathered per-slot state (leaves (L, K, ...)):
+        zero fresh rows (a first chunk must not see the slot's previous
+        occupant's SSM/conv state), advance one chunk, fuse the greedy
+        argmax."""
+        def zero(t):
+            m = fresh.reshape((1, fresh.shape[0]) + (1,) * (t.ndim - 2))
+            return jnp.where(m, jnp.zeros((), t.dtype), t)
+
+        state = jax.tree.map(zero, state)
+        logits, new_state, pos = model.prefill_chunk(p, state, toks, offs,
+                                                     lens)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, pos, new_state
+
+    def _chunk_fn(p, cache, toks, offs, lens, fresh, slots):
+        """Standalone chunk step: gather ``slots`` rows from the engine
+        cache (leaves (L, B, ...)), advance, scatter back. Pad rows carry an
+        out-of-bounds slot so their writes drop."""
+        _count("chunk")
+        sub = jax.tree.map(lambda t: jnp.take(t, slots, axis=1), cache)
+        first, pos, new_sub = _chunk_core(sub, toks, offs, lens, fresh, p)
+        cache = jax.tree.map(
+            lambda t, ns: t.at[:, slots].set(ns.astype(t.dtype), mode="drop"),
+            cache, new_sub)
+        return first, pos, cache
+
+    def _fleet_chunk_fn(p, slab, toks, offs, lens, fresh, rows, slots):
+        """ONE chunk dispatch for every due chunk row across the fleet:
+        gather (fleet row, slot) state from the donated slab, advance one
+        chunk, scatter back."""
+        _count("fleet_chunk")
+        sub = jax.tree.map(lambda s: s[rows, :, slots].swapaxes(0, 1), slab)
+        first, pos, new_sub = _chunk_core(sub, toks, offs, lens, fresh, p)
+        slab = jax.tree.map(
+            lambda s, ns: s.at[rows, :, slots].set(
+                ns.swapaxes(0, 1).astype(s.dtype), mode="drop"),
+            slab, new_sub)
+        return first, pos, slab
 
     k.prefill = jax.jit(_prefill_fn)
-    k.decode = jax.jit(lambda p, st, tok, pos: model.decode(p, st, tok, pos))
+    k.decode = jax.jit(_decode_fn)
+    k.decode_hold = jax.jit(_decode_hold_fn)
     # the fleet slab is owned exclusively by the FleetGroup (member engines
     # hold cache=None), so the input buffer can be donated: XLA updates the
-    # KV slab in place instead of copying it every dispatch.
+    # KV slab in place instead of copying it every dispatch. The standalone
+    # chunk kernel donates the engine cache the same way.
     k.fleet = jax.jit(_fleet_fn, donate_argnums=(1,))
+    k.fleet_hold = jax.jit(_fleet_hold_fn, donate_argnums=(1,))
     k.fleet_masked = jax.jit(_fleet_masked_fn, donate_argnums=(1,))
+    k.fleet_masked_hold = jax.jit(_fleet_masked_hold_fn, donate_argnums=(1,))
+    k.fleet_prefill = jax.jit(_fleet_prefill_fn, donate_argnums=(1,))
+    k.chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
+    k.fleet_chunk = jax.jit(_fleet_chunk_fn, donate_argnums=(1,))
     cache[key] = k
     return k
+
+
+def _pack_chunk_rows(rows, chunk_len: int):
+    """Pack per-slot chunk work items ``(toks, off, ln, fresh)`` into the
+    pow2-padded host arrays both chunk kernels take (pad rows: length-1
+    dummies whose index columns the caller points out of bounds)."""
+    K = pow2_bucket(len(rows))
+    toks = np.zeros((K, chunk_len), np.int32)
+    offs = np.zeros(K, np.int32)
+    lens = np.ones(K, np.int32)
+    fresh = np.zeros(K, bool)
+    for i, (t, off, ln, fr) in enumerate(rows):
+        toks[i], offs[i], lens[i], fresh[i] = t, off, ln, fr
+    return K, toks, offs, lens, fresh
+
+
+@dataclasses.dataclass
+class _ChunkCursor:
+    """Per-slot chunked-prefill progress: the (truncated) prompt streaming
+    into the slot and how many tokens earlier chunks consumed."""
+    req: "Request"
+    prompt: list
+    consumed: int = 0
+
+
+@dataclasses.dataclass
+class _AdmitPlans:
+    """Host-side admission decisions for one engine step (no dispatches):
+    ``bucketed`` groups share one pow2-bucket prefill each, ``singles`` are
+    exact-length admits (vlm/audio extras, moe exactness). Chunk starts are
+    recorded directly on the engine's cursor table."""
+    bucketed: list          # [(slots, reqs)]
+    singles: list           # [(slot, req)]
 
 
 class FleetGroup:
@@ -152,7 +375,13 @@ class FleetGroup:
     fleet scales 1 -> F); spare rows decode throwaway state and are fully
     overwritten when a replica joins, so they need no masking. Removing a
     member (drain retire / failure) backfills its row with the last member's
-    row in a single device op, so live rows stay dense."""
+    row in a single device op, so live rows stay dense.
+
+    ``admit_round`` is the admission twin of ``decode_round``: members'
+    bucketed admit rows of the same pow2 length bucket flatten into ONE
+    ``fleet_prefill`` per distinct bucket, and all due chunk rows into ONE
+    ``fleet_chunk`` — each writing KV/state straight into the donated slab.
+    ``prefill_dispatches`` mirrors ``dispatches``."""
 
     def __init__(self, model: Model, params, *, max_batch: int, max_seq: int,
                  cache_dtype=jnp.float32):
@@ -165,6 +394,7 @@ class FleetGroup:
         self.cap = 0                # allocated fleet rows (power of two)
         self.slab = None            # cache pytree, leaves (cap, *per_replica)
         self.dispatches = 0         # jitted fleet decode dispatches issued
+        self.prefill_dispatches = 0  # jitted fleet admission dispatches
         self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
 
     def __len__(self) -> int:
@@ -211,10 +441,90 @@ class FleetGroup:
 
     # -------------------------------------------------------------- slots
     def write_slot(self, f: int, slot: int, small_state, row: int):
-        """Copy prefill output row ``row`` into member ``f``'s slot."""
+        """Copy prefill output row ``row`` into member ``f``'s slot (the
+        exact-length single-admit path; bucketed admits scatter on device
+        inside ``fleet_prefill`` instead)."""
         self.slab = jax.tree.map(
             lambda s, sm: s.at[f, :, slot].set(sm[:, row]),
             self.slab, small_state)
+
+    # -------------------------------------------------------------- admit
+    def admit_round(self, stepping_ids=None) -> list:
+        """One fused admission step for every member (or the ``id(engine)``
+        subset in ``stepping_ids``): plan each member's admissions on the
+        host, then flatten same-length-bucket admit rows into one
+        ``fleet_prefill`` per distinct bucket and all due chunk rows into
+        one ``fleet_chunk``. Exact-length single admits (extras / moe) keep
+        the per-request path. Returns requests finished at prefill time."""
+        movers = [e for e in self.members
+                  if stepping_ids is None or id(e) in stepping_ids]
+        finished: list = []
+        buckets: dict = {}       # sb -> [(engine, slot, req, prompt)] rows
+        chunk_rows: list = []    # (engine, slot, toks, off, ln, fresh, final)
+        for e in movers:
+            plans = e.plan_admission()
+            for slot, req in plans.singles:
+                e._admit_batch([slot], [req], finished, bucketed=False)
+            for slots, reqs in plans.bucketed:
+                prompts = [r.prompt[-(self.max_seq - 1):] for r in reqs]
+                # the length bucket is chosen per member group exactly like
+                # the standalone path; rows of the same bucket then flatten
+                # into one fleet-wide batch
+                sb = min(pow2_bucket(max(len(p) for p in prompts),
+                                     e.min_bucket), self.max_seq)
+                buckets.setdefault(sb, []).extend(
+                    (e, s, r, p) for s, r, p in zip(slots, reqs, prompts))
+            for row in e._chunk_rows():
+                chunk_rows.append((e,) + row)
+        for sb, entries in sorted(buckets.items()):
+            self._dispatch_fleet_prefill(sb, entries, finished)
+        if chunk_rows:
+            self._dispatch_fleet_chunk(chunk_rows, finished)
+        return finished
+
+    def _dispatch_fleet_prefill(self, sb: int, entries: list,
+                                finished: list):
+        K = pow2_bucket(len(entries))
+        toks = np.zeros((K, sb), np.int32)
+        lens = np.ones(K, np.int32)             # pad rows: length-1 dummies
+        rows = np.full(K, self.cap, np.int32)   # OOB pad rows -> dropped
+        slots = np.full(K, self.max_batch, np.int32)
+        for i, (e, slot, req, p) in enumerate(entries):
+            toks[i, :len(p)] = p
+            lens[i] = len(p)
+            rows[i], slots[i] = e._fleet_row, slot
+        first, plen, self.slab = self._kernels.fleet_prefill(
+            self.params, self.slab, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(rows), jnp.asarray(slots))
+        self.prefill_dispatches += 1
+        first, plen = jax.device_get((first, plen))
+        first, plen = np.asarray(first), np.asarray(plen)
+        for i, (e, slot, req, p) in enumerate(entries):
+            e.commit_admit([slot], [req], first[i:i + 1], plen[i:i + 1],
+                           finished)
+
+    def _dispatch_fleet_chunk(self, chunk_rows: list, finished: list):
+        # members may carry different chunk_len settings; each width is its
+        # own fixed kernel shape
+        by_width: dict = {}
+        for item in chunk_rows:
+            by_width.setdefault(item[0].chunk_len, []).append(item)
+        for C, items in sorted(by_width.items()):
+            K, toks, offs, lens, fresh = _pack_chunk_rows(
+                [(t, off, ln, fr) for _, _, t, off, ln, fr, _ in items], C)
+            rows = np.full(K, self.cap, np.int32)       # OOB pads -> dropped
+            slots = np.full(K, self.max_batch, np.int32)
+            for i, (e, slot, *_rest) in enumerate(items):
+                rows[i], slots[i] = e._fleet_row, slot
+            first, pos, self.slab = self._kernels.fleet_chunk(
+                self.params, self.slab, jnp.asarray(toks), jnp.asarray(offs),
+                jnp.asarray(lens), jnp.asarray(fresh), jnp.asarray(rows),
+                jnp.asarray(slots))
+            self.prefill_dispatches += 1
+            first, pos = jax.device_get((first, pos))
+            first, pos = np.asarray(first), np.asarray(pos)
+            for i, (e, slot, t, off, ln, fr, fin) in enumerate(items):
+                e.commit_chunk(slot, first[i], pos[i], fin, finished)
 
     # -------------------------------------------------------------- decode
     def decode_round(self, stepping_ids=None) -> list:
@@ -223,7 +533,7 @@ class FleetGroup:
         round costs one jitted dispatch and one small (F, B) host sync."""
         movers = [e for e in self.members
                   if stepping_ids is None or id(e) in stepping_ids]
-        if not movers or not any(e.n_active for e in movers):
+        if not movers or not any(e.n_decoding for e in movers):
             return []
         cap, B = self.cap, self.max_batch
         toks = np.zeros((cap, B), np.int32)
@@ -232,19 +542,36 @@ class FleetGroup:
         eos = np.full((cap, B), -1, np.int32)
         active = np.zeros((cap, B), bool)
         rows = np.zeros((cap,), bool)
-        for e in movers:
+        held: list = []              # mid-chunk (row, slot): state must not
+        for e in movers:             # move this round
             f = e._fleet_row
             rows[f] = True
             toks[f] = e.last_tok
             pos[f] = e.pos
+            held.extend((f, s) for s in e._chunks)
             for s, req in enumerate(e.slots):
-                if req is not None:
+                if req is not None and s not in e._chunks:
                     active[f, s] = True
                     rem[f, s] = req.max_new_tokens - len(req.output)
                     eos[f, s] = req.eos_id
+        if held:                     # pow2-padded OOB -> dropped on scatter
+            hk = pow2_bucket(len(held))
+            hrows = np.full(hk, cap, np.int32)
+            hslots = np.full(hk, B, np.int32)
+            for i, (f, s) in enumerate(held):
+                hrows[i], hslots[i] = f, s
         if len(movers) == len(self.members):
-            nxt, done, self.slab = self._kernels.fleet(
-                self.params, self.slab, toks, pos, rem, eos, active)
+            if held:
+                nxt, done, self.slab = self._kernels.fleet_hold(
+                    self.params, self.slab, toks, pos, rem, eos, active,
+                    hrows, hslots)
+            else:
+                nxt, done, self.slab = self._kernels.fleet(
+                    self.params, self.slab, toks, pos, rem, eos, active)
+        elif held:
+            nxt, done, self.slab = self._kernels.fleet_masked_hold(
+                self.params, self.slab, toks, pos, rem, eos, active, rows,
+                hrows, hslots)
         else:
             nxt, done, self.slab = self._kernels.fleet_masked(
                 self.params, self.slab, toks, pos, rem, eos, active, rows)
@@ -259,9 +586,18 @@ class FleetGroup:
 
 
 def total_prefill_traces(engines) -> int:
-    """Global prefill compile count, deduped across replicas that share
-    kernels (each replica reports its shared counter)."""
-    seen = {id(e._kernels): e._kernels.traces for e in engines}
+    """Global prefill-side compile count (bucketed + fleet + chunk kernel
+    variants), deduped across replicas that share kernels (each replica
+    reports its shared counter)."""
+    seen = {id(e._kernels): e._kernels.prefill_traces for e in engines}
+    return sum(seen.values())
+
+
+def total_serve_traces(engines) -> int:
+    """Global compile count across *every* serve-kernel variant (prefill,
+    decode, decode_hold, fleet, fleet_masked, fleet_prefill, chunk,
+    fleet_chunk), deduped across replicas sharing kernels."""
+    seen = {id(e._kernels): e._kernels.total_traces for e in engines}
     return sum(seen.values())
 
 
@@ -292,7 +628,7 @@ class ReplicaEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0,
                  speed: float = 1.0, min_bucket: int = 8,
-                 bucket_prompts: Optional[bool] = None):
+                 bucket_prompts: Optional[bool] = None, chunk_len: int = 0):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -309,11 +645,23 @@ class ReplicaEngine:
         self.queue: deque = deque()
         self.clock = 0.0
         self.steps = 0
+        self.prefill_dispatches = 0   # jitted admission dispatches issued
         self._fleet: Optional[FleetGroup] = None   # device state owner when
         self._fleet_row = -1                       # fleet-batched
+        self._chunks: dict = {}       # slot -> _ChunkCursor (mid-chunk-prefill)
         if bucket_prompts is None:
             bucket_prompts = model.cfg.family in _BUCKET_FAMILIES
         self.bucket_prompts = bucket_prompts
+        # chunked admission needs a continuation kernel and an f32 cache:
+        # the int8 codec quantizes whole prompts at prefill end, and a
+        # reduced-precision (bf16) cache would make chunked attention read
+        # back rounded K/V (and re-round carried ssm/conv state per chunk)
+        # where single-shot prefill attends the unrounded values — breaking
+        # the chunk-vs-single-shot exactness the parity oracle relies on.
+        if chunk_len and (model.cfg.family not in _CHUNK_FAMILIES
+                          or _dtype_name(cache_dtype) != "float32"):
+            chunk_len = 0
+        self.chunk_len = int(chunk_len)
         self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
         self._prefill = self._kernels.prefill
         self._decode = self._kernels.decode
@@ -326,13 +674,21 @@ class ReplicaEngine:
 
     @property
     def prefill_traces(self) -> int:
-        """Prefill compilations of this replica's (shared) kernels."""
-        return self._kernels.traces
+        """Prefill-side compilations of this replica's (shared) kernels —
+        counts the bucketed, fleet-batched and chunked variants in one
+        accounting."""
+        return self._kernels.prefill_traces
 
     # ----------------------------------------------------------------- load
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    @property
+    def n_decoding(self) -> int:
+        """Slots in the decode phase (occupied and not mid-chunk-prefill)."""
+        return sum(s is not None and i not in self._chunks
+                   for i, s in enumerate(self.slots))
 
     @property
     def load(self) -> int:
@@ -347,6 +703,7 @@ class ReplicaEngine:
         lost = [r for r in self.slots if r is not None] + list(self.queue)
         self.slots = [None] * self.max_batch
         self.queue.clear()
+        self._chunks.clear()
         for r in lost:
             r.reset_progress()
         return lost
@@ -394,6 +751,7 @@ class ReplicaEngine:
                 batch.update({k: jnp.asarray(v) for k, v in extras.items()})
             logits, small, plen = self._prefill(self.params, batch)
             plen = np.full(1, int(plen), np.int32)
+        self.prefill_dispatches += 1
         first = np.asarray(jnp.argmax(logits, axis=-1))
         for i, (slot, req) in enumerate(zip(slots, reqs)):
             tok = int(first[i])
@@ -405,47 +763,171 @@ class ReplicaEngine:
                 continue
             self._insert_slot(slot, small, i, int(plen[i]), tok, req)
 
-    def _admit(self, finished: list):
+    def commit_admit(self, slots: list, reqs: list, first, plen,
+                     finished: list):
+        """Apply a fleet-prefill result: the slab rows were already written
+        on device, so only the host bookkeeping (first token, TTFT, retire
+        or register) remains. A request that finishes at prefill time leaves
+        stale state in the slab — harmless, exactly like slot reuse."""
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            tok = int(first[i])
+            req.output.append(tok)
+            req.first_token_time = self.clock
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+                req.finish_time = self.clock
+                finished.append(req)
+                continue
+            self.pos[slot] = int(plen[i])
+            self.last_tok[slot] = tok
+            self.slots[slot] = req
+
+    # ------------------------------------------------------------ admission
+    def _chunkable(self, req: Request) -> bool:
+        return (self.chunk_len > 0
+                and getattr(req, "extras", None) is None
+                and min(len(req.prompt), self.max_seq - 1) > self.chunk_len)
+
+    def plan_admission(self) -> _AdmitPlans:
+        """Pop admittable queue heads into reserved slots WITHOUT
+        dispatching — the shared host half of both the standalone and the
+        fleet-batched admission paths (identical plans keep the two modes in
+        lockstep). Chunk-eligible prompts just reserve a slot + cursor;
+        their first chunk runs in this step's chunk round."""
+        plans = _AdmitPlans([], [])
         if self.draining:
-            return
+            return plans
         free = [i for i in range(self.max_batch) if self.slots[i] is None]
         while free and self.queue:
-            head_has_extras = getattr(self.queue[0], "extras", None)
-            if not self.bucket_prompts or head_has_extras:
-                # exact-length single admit (audio / extras-carrying requests)
-                self._admit_batch([free.pop(0)], [self.queue.popleft()],
-                                  finished, bucketed=False)
+            head = self.queue[0]
+            if self._chunkable(head):
+                req = self.queue.popleft()
+                slot = free.pop(0)
+                self.slots[slot] = req
+                self._chunks[slot] = _ChunkCursor(
+                    req, req.prompt[-(self.max_seq - 1):])
+                continue
+            if not self.bucket_prompts or getattr(head, "extras", None):
+                # exact-length single admit (audio / extras-carrying
+                # requests, and moe replicas by default)
+                plans.singles.append((free.pop(0), self.queue.popleft()))
                 continue
             group = []
             while (self.queue and len(group) < len(free)
-                   and not getattr(self.queue[0], "extras", None)):
+                   and not getattr(self.queue[0], "extras", None)
+                   and not self._chunkable(self.queue[0])):
                 group.append(self.queue.popleft())
-            self._admit_batch([free.pop(0) for _ in group], group,
-                              finished, bucketed=True)
+            plans.bucketed.append(([free.pop(0) for _ in group], group))
+        return plans
 
-    def begin_step(self, dt: float = 1.0) -> list:
+    def _admit(self, finished: list):
+        """Standalone admission: plan, then dispatch this engine's own
+        bucketed / exact-length prefill calls."""
+        plans = self.plan_admission()
+        for slot, req in plans.singles:
+            self._admit_batch([slot], [req], finished, bucketed=False)
+        for slots, reqs in plans.bucketed:
+            self._admit_batch(slots, reqs, finished, bucketed=True)
+
+    # --------------------------------------------------------------- chunks
+    def _chunk_rows(self):
+        """This step's chunk work items:
+        (slot, toks (chunk_len,), offset, true_len, fresh, final)."""
+        rows = []
+        for slot in sorted(self._chunks):
+            cur = self._chunks[slot]
+            off = cur.consumed
+            ln = min(self.chunk_len, len(cur.prompt) - off)
+            toks = np.zeros(self.chunk_len, np.int32)
+            toks[:ln] = cur.prompt[off:off + ln]
+            rows.append((slot, toks, off, ln, off == 0,
+                         off + ln >= len(cur.prompt)))
+        return rows
+
+    def commit_chunk(self, slot: int, first_tok, pos, final: bool,
+                     finished: list):
+        """Apply one chunk result: advance the cursor, or — on the final
+        chunk — record the first generated token and hand the slot to the
+        decode phase (or retire it immediately)."""
+        cur = self._chunks[slot]
+        if not final:
+            cur.consumed += self.chunk_len
+            return
+        del self._chunks[slot]
+        req = cur.req
+        tok = int(first_tok)
+        req.output.append(tok)
+        req.first_token_time = self.clock
+        if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+            req.finish_time = self.clock
+            finished.append(req)
+            self.slots[slot] = None
+            return
+        self.pos[slot] = int(pos)
+        self.last_tok[slot] = tok
+
+    def _chunk_step(self, finished: list):
+        """Advance every mid-chunk slot by one chunk in ONE batched
+        dispatch (fleet members route through the fleet slab kernel)."""
+        rows = self._chunk_rows()
+        if not rows:
+            return
+        if self._fleet is not None:
+            self._fleet._dispatch_fleet_chunk(
+                [(self,) + row for row in rows], finished)
+            return
+        K, toks, offs, lens, fresh = _pack_chunk_rows(
+            [(t, off, ln, fr) for _, t, off, ln, fr, _ in rows],
+            self.chunk_len)
+        slots = np.full(K, self.max_batch, np.int32)   # OOB pads -> dropped
+        for i, (slot, *_rest) in enumerate(rows):
+            slots[i] = slot
+        first, pos, self.cache = self._kernels.chunk(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(offs),
+            jnp.asarray(lens), jnp.asarray(fresh), jnp.asarray(slots))
+        self.prefill_dispatches += 1
+        first, pos = jax.device_get((first, pos))
+        first, pos = np.asarray(first), np.asarray(pos)
+        for i, (slot, t, off, ln, fr, fin) in enumerate(rows):
+            self.commit_chunk(slot, first[i], pos[i], fin, finished)
+
+    # ------------------------------------------------------------- stepping
+    def begin_step(self, dt: float = 1.0, admit: bool = True) -> list:
         """Tick phase 1: advance the clock and admit from the queue. Returns
-        requests that completed at prefill time. The decode phase follows via
+        requests that completed at prefill time. With ``admit=False`` only
+        the clock moves — the caller batches admission across the fleet via
+        ``FleetGroup.admit_round``. The decode phase follows via
         ``finish_step`` (standalone) or one ``FleetGroup.decode_round``."""
         self.clock += dt
         finished: list = []
-        self._admit(finished)
+        if admit:
+            self._admit(finished)
+            self._chunk_step(finished)
         return finished
 
     def finish_step(self) -> list:
-        """Tick phase 2: one decode step for all active slots."""
-        if self.n_active == 0:
-            return []
+        """Tick phase 2: one decode step for all active (non-chunking)
+        slots."""
         if self._fleet is not None:    # device state lives in the fleet slab
             return self._fleet.decode_round({id(self)})
+        if self.n_decoding == 0:
+            return []
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        if self._chunks:
+            # mid-chunk slots must keep their carried state bit-for-bit
+            hk = pow2_bucket(len(self._chunks))
+            hslots = np.full(hk, self.max_batch, np.int32)  # OOB pads
+            hslots[:len(self._chunks)] = sorted(self._chunks)
+            logits, self.cache = self._kernels.decode_hold(
+                self.params, self.cache, toks, pos, jnp.asarray(hslots))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, toks,
+                                              pos)
         self.steps += 1
         finished: list = []
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         for slot, req in enumerate(self.slots):
-            if req is None:
+            if req is None or slot in self._chunks:
                 continue
             tok = int(next_toks[slot])
             req.output.append(tok)
@@ -461,11 +943,12 @@ class ReplicaEngine:
     def commit_decode(self, next_toks: np.ndarray, done: np.ndarray) -> list:
         """Apply one fleet decode result to the host-side slot bookkeeping.
         ``next_toks``/``done`` are this engine's (B,) rows of the batched
-        sync; the retire mask was already computed on device."""
+        sync; the retire mask was already computed on device. Mid-chunk
+        slots were held on device and are skipped here."""
         finished: list = []
         stepped = False
         for slot, req in enumerate(self.slots):
-            if req is None:
+            if req is None or slot in self._chunks:
                 continue
             stepped = True
             tok = int(next_toks[slot])
@@ -511,10 +994,14 @@ class ClusterFrontend:
 
     ``fleet_batch=True`` stacks same-shape replicas into ``FleetGroup``s so a
     ``step`` issues one decode dispatch per group instead of one per replica
-    (replicas that can't stack — different shapes — keep stepping solo)."""
+    (replicas that can't stack — different shapes — keep stepping solo).
+    ``fleet_prefill`` (default: follows ``fleet_batch``) batches admission
+    the same way: one prefill dispatch per distinct bucket shape per group;
+    set it False to keep per-replica admission as the parity oracle."""
 
     def __init__(self, replicas: list, policy: str = "lc",
-                 fractions_fn=None, seed: int = 0, fleet_batch: bool = False):
+                 fractions_fn=None, seed: int = 0, fleet_batch: bool = False,
+                 fleet_prefill: Optional[bool] = None):
         self.replicas = replicas
         self.policy = policy
         self.fractions_fn = fractions_fn
@@ -523,6 +1010,8 @@ class ClusterFrontend:
         self.finished: list = []
         self._rr = itertools.cycle(range(len(replicas)))
         self.fleets: dict = {}
+        self.fleet_prefill = fleet_batch if fleet_prefill is None \
+            else (fleet_prefill and fleet_batch)
         if fleet_batch:
             for eng in replicas:
                 g = self.fleets.get(eng.fleet_key)
@@ -557,7 +1046,11 @@ class ClusterFrontend:
                 self.finished.extend(r.step(dt))
             return
         for r in self.replicas:
-            self.finished.extend(r.begin_step(dt))
+            self.finished.extend(r.begin_step(
+                dt, admit=r._fleet is None or not self.fleet_prefill))
+        if self.fleet_prefill:
+            for g in self.fleets.values():
+                self.finished.extend(g.admit_round())
         for g in self.fleets.values():
             self.finished.extend(g.decode_round())
         for r in self.replicas:          # replicas outside any fleet
