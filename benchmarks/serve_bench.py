@@ -1,6 +1,6 @@
 """Elastic serving-engine benchmark: the perf trajectory of the request path.
 
-Five phases over real CPU forwards:
+Phases over real CPU forwards:
 
   * **fleet vs per-replica** — the same saturating workload through 4
     same-model replicas (2 nodes x 2) with fleet-batched decode ON and OFF:
@@ -15,6 +15,11 @@ Five phases over real CPU forwards:
     prompts, chunking ON and OFF: short-request TTFT p95 (must stay flat)
     and the p95 per-tick wall time (a single-shot long prefill stalls the
     whole tick — the decode-TBT tail chunking is meant to bound);
+  * **SLO tiers A/B** — the same mildly-saturating 3-tier request stream
+    through tiered weighted-deficit admission and the untiered FIFO
+    scheduler: per-tier TTFT/TBT p50/p95 + SLO attainment, the batch tier's
+    max wait (starvation bound), aggregate tok/s both ways and the fleet
+    dispatch bounds under tiering (ordering changes, dispatches don't);
   * **tick-cost scaling** — saturated steps/sec at fleet sizes 1/2/4/8 on
     one node (a fleet-batched hot loop should be near-flat: tick cost is one
     dispatch regardless of replica count);
@@ -259,6 +264,124 @@ def bench_chunked(model, params, cfg) -> dict:
                                   max(on["tick_wall_p95_ms"], 1e-9), 2)}}
 
 
+TIER_RATE = 3.0          # req/tick into ~2.7 req/tick of capacity: mildly
+TIER_TICKS = 36          # saturating, so admission order actually matters
+TIER_NEW = 6
+
+
+def bench_tiers(model, params, cfg) -> dict:
+    """Mixed 3-tier workload A/B: tiered weighted-deficit admission vs the
+    untiered FIFO scheduler on the identical request stream.
+
+    Reports per-tier TTFT/TBT p50/p95 and SLO attainment, the batch tier's
+    max wait (starvation bound), aggregate tok/s both ways (tiering must
+    cost ordering, not throughput) and the fleet dispatch bounds during the
+    tiered run (one decode dispatch per group per tick; prefill dispatches
+    per admission tick at the distinct-bucket-shape bound). Paired,
+    interleaved tick chunks like the fleet A/B so machine noise hits both
+    modes equally."""
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+    from repro.workload import TierSet, TierSpec
+
+    tiers = TierSet([
+        TierSpec("premium", share=0.25, weight=5.0, ttft_target=4.0),
+        TierSpec("standard", share=0.5, weight=2.0, ttft_target=8.0),
+        TierSpec("batch", share=0.25, weight=1.0),
+    ])
+
+    def make_fe(ts):
+        rng = np.random.default_rng(0)
+
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid, tiers=ts)
+
+        def rf(rid, tick):
+            plen = int(rng.integers(2, 14))
+            req = Request(rid,
+                          rng.integers(1, cfg.vocab_size, plen).tolist(),
+                          max_new_tokens=TIER_NEW)
+            # stamp tiers in BOTH runs (identical rng stream): the untiered
+            # frontend ignores the field, so the A/B measures pure ordering
+            req.tier = tiers.sample(rng)
+            return req
+
+        return ElasticClusterFrontend(
+            mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+            request_factory=rf, seed=0, est_tokens=TIER_NEW, tiers=ts)
+
+    fes = {"tiered": make_fe(tiers), "untiered": make_fe(None)}
+    for fe in fes.values():                  # warm compiles + fill slots
+        for _ in range(12):
+            fe.tick(TIER_RATE)
+    wall = {k: 0.0 for k in fes}
+    toks = {k: 0 for k in fes}
+    disp = {"decode": [], "prefill": 0, "admit_ticks": 0}
+    for _ in range(TIER_TICKS // 6):         # interleaved 6-tick chunks
+        for key, fe in fes.items():
+            done0 = sum(len(r.output) for r in fe.finished)
+            t0 = time.perf_counter()
+            for _ in range(6):
+                m = fe.tick(TIER_RATE)
+                if key == "tiered":
+                    if m["decode_dispatches"]:
+                        disp["decode"].append(
+                            m["decode_dispatches"]
+                            / max(m["fleet_groups"], 1))
+                    if m["prefill_dispatches"]:
+                        disp["prefill"] += m["prefill_dispatches"]
+                        disp["admit_ticks"] += 1
+            wall[key] += time.perf_counter() - t0
+            toks[key] += sum(len(r.output) for r in fe.finished) - done0
+    for fe in fes.values():
+        fe.run_until_drained()
+
+    def percentile_block(fe):
+        out = {}
+        for spec in tiers.specs:
+            sub = [r for r in fe.finished
+                   if tiers.index(r.tier) == tiers.index(spec.name)]
+            if not sub:
+                continue
+            ttft = [r.first_token_time - r.arrival for r in sub]
+            tbt = [(r.finish_time - r.first_token_time)
+                   / max(len(r.output) - 1, 1) for r in sub]
+            row = {
+                "n": len(sub),
+                "ttft_p50": float(np.percentile(ttft, 50)),
+                "ttft_p95": float(np.percentile(ttft, 95)),
+                "ttft_max": float(np.max(ttft)),
+                "tbt_p50": float(np.percentile(tbt, 50)),
+                "tbt_p95": float(np.percentile(tbt, 95)),
+            }
+            if np.isfinite(spec.ttft_target):
+                row["slo_attainment"] = float(np.mean(
+                    np.asarray(ttft) <= spec.ttft_target))
+            out[spec.name] = row
+        return out
+
+    tiered_tps = toks["tiered"] / max(wall["tiered"], 1e-9)
+    untiered_tps = toks["untiered"] / max(wall["untiered"], 1e-9)
+    per_tier = {k: percentile_block(fe) for k, fe in fes.items()}
+    return {"tiers": {
+        "mix": "premium:0.25:w5:4,standard:0.5:w2:8,batch:0.25:w1",
+        "per_tier": per_tier,
+        "premium_ttft_p95_tiered":
+            per_tier["tiered"]["premium"]["ttft_p95"],
+        "premium_ttft_p95_untiered":
+            per_tier["untiered"]["premium"]["ttft_p95"],
+        "batch_ttft_max_tiered": per_tier["tiered"]["batch"]["ttft_max"],
+        "tok_per_s_tiered": round(tiered_tps, 2),
+        "tok_per_s_untiered": round(untiered_tps, 2),
+        "tok_per_s_ratio": round(tiered_tps / max(untiered_tps, 1e-9), 3),
+        "decode_dispatches_per_tick":
+            round(float(np.max(disp["decode"])) if disp["decode"] else 0.0,
+                  3),
+        "prefill_dispatches_per_admit_tick":
+            round(disp["prefill"] / max(disp["admit_ticks"], 1), 3),
+    }}
+
+
 def bench_tick_scaling(model, params, cfg) -> dict:
     """Saturated steps/sec vs fleet size (flat curve == batched hot loop)."""
     from repro.serving import ElasticClusterFrontend, Request
@@ -371,6 +494,7 @@ def main() -> list:
     blob.update(bench_fleet_vs_loop(model, params, cfg))
     blob.update(bench_fleet_prefill(model, params, cfg))
     blob.update(bench_chunked(model, params, cfg))
+    blob.update(bench_tiers(model, params, cfg))
     blob.update(bench_tick_scaling(model, params, cfg))
     blob.update(bench_int8_capacity(model))
     blob.update(bench_control_plane(model, params, cfg))
@@ -395,6 +519,13 @@ def main() -> list:
         ("serve/chunked_tick_wall_p95_ms",
          blob["chunked"]["on"]["tick_wall_p95_ms"] * 1e6,
          f"{blob['chunked']['off']['tick_wall_p95_ms']}ms single-shot"),
+        ("serve/premium_ttft_p95_tiered",
+         blob["tiers"]["premium_ttft_p95_tiered"] * 1e6,
+         f"vs {blob['tiers']['premium_ttft_p95_untiered']}t untiered, "
+         f"tok/s ratio {blob['tiers']['tok_per_s_ratio']}"),
+        ("serve/batch_ttft_max_tiered",
+         blob["tiers"]["batch_ttft_max_tiered"] * 1e6,
+         "batch-tier starvation bound (ticks)"),
         ("serve/steps_per_s_8_replicas", 1e6 / max(flat["8"], 1e-9),
          f"1rep={flat['1']}/s 8rep={flat['8']}/s"),
         ("serve/ttft_p95", blob["ttft_p95_ticks"] * 1e6,

@@ -1,6 +1,6 @@
 """Fast serving smoke for CI: tiny model, 2 replicas, hard asserts.
 
-Guards the two admission-path invariants cheap enough for every PR:
+Guards the admission-path invariants cheap enough for every PR:
 
   * **fleet admission dispatch bound** — a cold burst of same-length
     prompts must admit in <= (distinct bucket shapes) jitted prefill
@@ -10,7 +10,12 @@ Guards the two admission-path invariants cheap enough for every PR:
   * **TTFT regression bound** — with chunked admission on, short requests
     sharing the cluster with near-``max_seq`` prompts must keep their TTFT
     p95 within the same small constant as a short-only run would give
-    (admission is interleaved, not front-loaded).
+    (admission is interleaved, not front-loaded);
+  * **SLO tiers** — a 3-tier cold burst must (a) give premium a TTFT p95
+    no worse than the untiered FIFO baseline on the identical workload,
+    (b) still finish every batch-tier request (no starvation), and (c)
+    keep the fleet dispatch bounds: tiering reorders which rows enter the
+    one fleet prefill/decode per tick, it never adds dispatches.
 
 Exits non-zero on violation (plain asserts); prints the measured numbers so
 CI logs double as a mini-benchmark.
@@ -94,6 +99,64 @@ def main():
           f"short TTFT p95={ttft_p95:.1f} ticks (bound {TTFT_P95_BOUND})")
     assert ttft_p95 <= TTFT_P95_BOUND, \
         "chunked admission regressed short-request TTFT"
+
+    # ---- 3-tier premium TTFT + dispatch bounds ------------------------
+    from repro.workload import TierSet, TierSpec
+
+    tiers = TierSet([TierSpec("premium", share=0.34, weight=5.0,
+                              ttft_target=3.0),
+                     TierSpec("standard", share=0.33, weight=2.0),
+                     TierSpec("batch", share=0.33, weight=1.0)])
+    burst = [rng.integers(1, cfg.vocab_size, 6).tolist() for _ in range(24)]
+
+    def tier_burst(ts):
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid, tiers=ts)
+        fe = ElasticClusterFrontend(mk, 1, initial_replicas=2,
+                                    max_replicas_per_node=2, seed=0,
+                                    tiers=ts)
+        for i, p in enumerate(burst):
+            req = Request(i, list(p), max_new_tokens=3)
+            if ts is not None:
+                req.tier = tiers.names[i % 3]
+            fe.submit(req)
+        admit_m = fe.tick(0.0)
+        max_decode = 0.0
+        for _ in range(100):
+            m = fe.tick(0.0)
+            if m["decode_dispatches"]:
+                max_decode = max(max_decode, m["decode_dispatches"]
+                                 / max(m["fleet_groups"], 1))
+            if not fe.pending and all(n.unfinished() == 0
+                                      for n in fe.nodes):
+                break
+        return fe, admit_m, max_decode
+
+    fe_t, admit_t, dec_t = tier_burst(tiers)
+    fe_u, admit_u, _ = tier_burst(None)
+
+    def ttft95(fe, pred):
+        return float(np.percentile(
+            [r.first_token_time - r.arrival
+             for r in fe.finished if pred(r)], 95))
+
+    prem = lambda r: r.rid % 3 == 0          # the same request population
+    prem_tiered = ttft95(fe_t, prem)
+    prem_untiered = ttft95(fe_u, prem)
+    batch_done = [r for r in fe_t.finished if r.rid % 3 == 2]
+    print(f"[smoke] 3-tier burst: premium TTFT p95 tiered={prem_tiered:.1f} "
+          f"untiered={prem_untiered:.1f}; batch finished={len(batch_done)}/8; "
+          f"admit prefill_dispatches={admit_t['prefill_dispatches']} "
+          f"max decode_dispatches/group={dec_t:.1f}")
+    assert prem_tiered <= prem_untiered, \
+        "tiered premium TTFT p95 must not exceed the untiered baseline"
+    assert len(batch_done) == 8, "batch tier starved under tiering"
+    assert admit_t["prefill_dispatches"] <= 1, \
+        "tiering must not add admission dispatches (one bucket shape)"
+    assert admit_t["prefill_dispatches"] <= admit_u["prefill_dispatches"]
+    assert dec_t <= 1.0, \
+        "tiering must keep ONE fleet decode dispatch per group per tick"
     print("[smoke] OK")
 
 

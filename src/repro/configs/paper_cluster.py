@@ -19,6 +19,8 @@ class ClusterConfig:
     # --- Eq.5 reward weights ---
     alpha: float = 1.0               # response-time weight
     beta: float = 0.25               # resource (idle/overload) cost weight
+    slo_gamma: float = 0.5           # tier-weighted SLO-violation weight
+    #   (scales metrics['tier_slo_cost'] in the reward; inert when untiered)
     # --- node economics ---
     base_capacity: float = 100.0     # requests/sec per replica (scaled by arch cost)
     max_replicas_per_node: int = 8
@@ -46,6 +48,8 @@ class ClusterConfig:
     # --- GPSO (Eq.9-11) ---
     lam: float = 32.0                # λ cost/load balance weight in Eq.9
     target_load: float = 0.7         # provisioning headroom (L_i target)
+    slo_lam: float = 8.0             # tier-weighted SLO-violation cost weight
+    #   (the Eq.9 extension used when the backend reports tier_pressure)
     ga_pop: int = 64
     ga_generations: int = 20
     ga_elite: int = 16

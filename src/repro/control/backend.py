@@ -18,6 +18,18 @@ The per-tick contract (what ``ControlPlane.step`` calls, in order):
 
 plus the read-only views balancers/autoscalers need: ``up_mask``,
 ``queue_depths``, ``capacity``, ``in_flight`` and ``node_speed``.
+
+**Tiered metrics (optional).** A backend serving SLO-tiered traffic (see
+``repro.workload.trace.TierSet``) additionally reports per-tier state in its
+``tick()``/``metrics()`` dict — ``tier_queue`` (T, N) per-tier queue depths,
+``tier_pressure`` (N,) tier-weighted backlog (consumed by the GPSO plan's
+SLO-violation cost term) and the scalar ``tier_slo_cost`` in [0, 1] (the
+tier-weighted violation level entering the Eq.5 reward); the elastic
+backend also emits per-tier ``tier_ttft``/``tier_tbt``/``tier_served``.
+Untiered backends simply omit the keys and the control plane falls back to
+the original objective/reward — both implementations here emit the same key
+set for the same tier configuration, which is what keeps policy rankings
+consistent across the fluid and request-level backends.
 """
 from __future__ import annotations
 

@@ -156,8 +156,11 @@ class ControlPlane:
                            float(arrival_rate)) + 2.0 * sigma
                 node_demand = peak * np.maximum(self.fractions,
                                                 1.0 / (4 * n))
+                # tiered backends report a weighted per-node backlog; the
+                # plan then optimizes Eq.9 + the SLO-violation cost term
                 target = self.scaler.plan(node_demand, self.t, in_flight,
-                                          node_speed=self.backend.node_speed)
+                                          node_speed=self.backend.node_speed,
+                                          slo_pressure=m.get("tier_pressure"))
                 self.backend.scale_to(target)
             else:
                 # emergency path: instantaneous overload on a node triggers
@@ -185,8 +188,13 @@ class ControlPlane:
         m = self.backend.tick(arrival_rate)
 
         if self.balancer == "rl":
+            # Eq.5, tier-weighted: backends serving tiered traffic report a
+            # weighted SLO violation level; untiered backends omit the key
+            # and the reward reduces to the original shape.
             reward = bal.reward_fn(m["response_time"], m["mean_utilization"],
-                                   cfg.alpha, cfg.beta, m["overload"])
+                                   cfg.alpha, cfg.beta, m["overload"],
+                                   slo_cost=cfg.slo_gamma *
+                                   float(m.get("tier_slo_cost") or 0.0))
             if self._prev is not None and self.train_rl:
                 self.rl.observe(self._prev[0], self._prev[1],
                                 float(self._prev[2]), obs, up)

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gpso import ga_only_minimize, gpso_minimize
+from repro.core.gpso import ga_only_minimize, gpso_minimize, slo_violation_cost
 
 
 def eq9_fitness(R, ctx):
@@ -43,12 +43,30 @@ def eq9_fitness(R, ctx):
             + 50.0 * jnp.sum(unserved, axis=-1) / mean_unit)
 
 
+def eq9_tiered_fitness(R, ctx):
+    """Eq.9 extended with the tier-weighted SLO-violation cost term.
+
+    ctx = eq9 ctx ++ (slo_lam, pressure (N,)): ``pressure`` is the backends'
+    ``tier_pressure`` metric normalized to a per-node share — nodes whose
+    backlog is premium-heavy draw an extra penalty when their load exceeds
+    the headroom target, so the planner provisions SLO-critical nodes first
+    instead of treating every queued request alike."""
+    demand, unit_capacity, replica_cost, lam, target, slo_lam, pressure = ctx
+    unit_capacity = jnp.asarray(unit_capacity)
+    Rr = jnp.round(R)
+    cap = Rr * unit_capacity
+    load = demand[None, :] / jnp.maximum(cap, 1e-6)
+    base = eq9_fitness(R, (demand, unit_capacity, replica_cost, lam, target))
+    return base + slo_lam * slo_violation_cost(load, pressure, target)
+
+
 @dataclasses.dataclass
 class GPSOAutoscaler:
     """The paper's autoscaler: demand forecast -> GPSO plan (Eq.9-11).
 
     optimizer='ga' drops the PSO refinement (the paper's implicit ablation:
-    GA-only at the same evaluation budget)."""
+    GA-only at the same evaluation budget). ``plan(slo_pressure=...)``
+    switches to the tiered objective (Eq.9 + tier-weighted SLO cost)."""
     cluster_cfg: "ClusterConfig"
     unit_capacity: float
     seed: int = 0
@@ -60,8 +78,13 @@ class GPSOAutoscaler:
 
     def plan(self, node_demand: np.ndarray, tick: int,
              current: np.ndarray,
-             node_speed: Optional[np.ndarray] = None) -> np.ndarray:
-        """node_demand: (N,) forecast peak demand per node -> replicas (N,)."""
+             node_speed: Optional[np.ndarray] = None,
+             slo_pressure: Optional[np.ndarray] = None) -> np.ndarray:
+        """node_demand: (N,) forecast peak demand per node -> replicas (N,).
+
+        slo_pressure: optional (N,) tier-weighted backlog (the backends'
+        ``tier_pressure`` metric); when given, the plan optimizes the
+        tiered Eq.9 objective."""
         cfg = self.cluster_cfg
         n = node_demand.shape[0]
         if node_speed is None:
@@ -71,10 +94,17 @@ class GPSOAutoscaler:
                jnp.asarray(self.unit_capacity * node_speed, jnp.float32),
                jnp.float32(cfg.replica_cost), jnp.float32(cfg.lam),
                jnp.float32(cfg.target_load))
+        fitness = eq9_fitness
+        if slo_pressure is not None and np.asarray(slo_pressure).any():
+            p = np.asarray(slo_pressure, np.float64)
+            p = p / max(p.sum(), 1e-9)       # per-node share, scale-free
+            fitness = eq9_tiered_fitness
+            ctx = ctx + (jnp.float32(cfg.slo_lam),
+                         jnp.asarray(p, jnp.float32))
         minimize = gpso_minimize if self.optimizer == "gpso" else \
             ga_only_minimize
         best, cost, _ = minimize(
-            sub, eq9_fitness, node_demand.shape[0], cfg,
+            sub, fitness, node_demand.shape[0], cfg,
             lo=float(cfg.min_replicas_per_node),
             hi=float(cfg.max_replicas_per_node), ctx=ctx)
         target = np.asarray(jnp.round(best), np.int32)

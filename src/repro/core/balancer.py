@@ -114,12 +114,19 @@ class RLBalancer:
         return {k: float(v) for k, v in metrics.items()}
 
 
-def reward_fn(response_time, utilization, alpha, beta, overload):
+def reward_fn(response_time, utilization, alpha, beta, overload,
+              slo_cost: float = 0.0):
     """Eq.5 (see DESIGN.md §8 for the utilization-term interpretation):
-    R_t = -(α·ResponseTime + β·(idle-capacity + overload penalty)).
+    R_t = -(α·ResponseTime + β·(idle-capacity + overload penalty)
+            + tier-weighted SLO cost).
 
     Response time enters through log1p so transient queue blow-ups cannot
-    destabilize the critic (reward stays O(1))."""
+    destabilize the critic (reward stays O(1)). ``slo_cost`` is the
+    tier-weighted SLO violation level of the tick (already scaled by the
+    caller, e.g. ``cfg.slo_gamma * metrics['tier_slo_cost']``): with tiered
+    traffic the policy is penalized more for premium-tier misses than for
+    batch-tier ones; untiered runs pass 0 and recover the original Eq.5."""
     idle_cost = 1.0 - utilization
     rt_cost = float(np.log1p(response_time))
-    return -(alpha * rt_cost + beta * (idle_cost + 2.0 * overload))
+    return -(alpha * rt_cost + beta * (idle_cost + 2.0 * overload)
+             + float(slo_cost))

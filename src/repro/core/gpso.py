@@ -18,6 +18,21 @@ import jax
 import jax.numpy as jnp
 
 
+def slo_violation_cost(load, pressure, target):
+    """Tier-weighted SLO-violation cost term for Eq.9 objectives.
+
+    load: (P, N) per-node load under each candidate allocation; pressure:
+    (N,) tier-weighted backlog share per node (premium-heavy nodes weigh
+    more — see ``workload.trace.TierSet.pressure``); target: scalar
+    provisioning headroom. Returns (P,): the pressure-weighted mass of load
+    above target, so the optimizer buys extra replicas for exactly the nodes
+    whose backlog carries high-priority traffic. Zero pressure (or a
+    single-tier workload) makes the term vanish and Eq.9 reduces to its
+    untiered form."""
+    return jnp.sum(pressure[None, :] * jnp.maximum(load - target, 0.0),
+                   axis=-1)
+
+
 def _roulette(key, costs, n: int):
     """Sample n indices with probability ∝ softmax(-normalized cost)."""
     z = (costs - costs.mean()) / (costs.std() + 1e-9)

@@ -29,7 +29,11 @@ Admission flags: ``--chunk-len N`` streams prompts longer than N in fixed
 chunks interleaved with decode (bounded TTFT/TBT tail); fleet mode batches
 all same-bucket admits across replicas into one jitted prefill per distinct
 bucket shape per tick (``--no-fleet-prefill`` restores per-replica
-admission as the A/B oracle).
+admission as the A/B oracle); ``--tiers premium:0.2:w5:4,standard:0.5:w2,
+batch:0.3:w1`` serves an SLO-tiered mix (share : weighted-deficit weight :
+optional TTFT target) through tiered replica queues, per-tier metrics and
+the tier-weighted Eq.5/Eq.9 objectives — the default single tier is
+bit-identical to the untiered scheduler.
 """
 from __future__ import annotations
 
@@ -49,8 +53,9 @@ def run_control_loop(args, cfg, model, params):
     from repro.control import ControlPlane
     from repro.core import balancer as bal
     from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
-    from repro.workload import TraceConfig, generate_trace
+    from repro.workload import TraceConfig, generate_trace, parse_tiers
 
+    tiers = parse_tiers(args.tiers)
     ccfg = ClusterConfig(
         num_nodes=args.nodes, horizon=8, forecast_window=16,
         provisioning_delay=args.provision_delay,
@@ -65,12 +70,15 @@ def run_control_loop(args, cfg, model, params):
         mb = int(rng.choice([max(2, args.max_batch // 2), args.max_batch]))
         return ReplicaEngine(model, params, max_batch=mb,
                              max_seq=args.max_seq, rid=rid, speed=speed,
-                             chunk_len=args.chunk_len)
+                             chunk_len=args.chunk_len, tiers=tiers)
 
     def request_factory(rid: int, tick: int) -> Request:
         plen = int(rng.integers(2, 12))
-        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
-                       max_new_tokens=int(rng.integers(4, 12)))
+        req = Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                      max_new_tokens=int(rng.integers(4, 12)))
+        if len(tiers) > 1:     # single-tier: no extra rng draw, so default
+            req.tier = tiers.sample(rng)      # invocations stay bit-exact
+        return req
 
     est_tokens = 8.0
     fe = ElasticClusterFrontend(
@@ -80,7 +88,7 @@ def run_control_loop(args, cfg, model, params):
         failure_rate=args.failure_rate, request_factory=request_factory,
         seed=args.seed, est_tokens=est_tokens,
         fleet_batch=not args.no_fleet,
-        fleet_prefill=not args.no_fleet_prefill)
+        fleet_prefill=not args.no_fleet_prefill, tiers=tiers)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -129,6 +137,21 @@ def run_control_loop(args, cfg, model, params):
         print(f"[serve] TTFT p50={ttft[0]:.1f} p95={ttft[1]:.1f} ticks; "
               f"latency p50={lat[0]:.1f} p95={lat[1]:.1f} ticks; "
               f"prefill retraces={traces}")
+        if len(tiers) > 1:
+            for spec in tiers.specs:
+                sub = [r for r in done if tiers.index(r.tier)
+                       == tiers.index(spec.name)]
+                if not sub:
+                    continue
+                tt = _percentiles([r.first_token_time - r.arrival
+                                   for r in sub])
+                att = ""
+                if np.isfinite(spec.ttft_target):
+                    ok = np.mean([r.first_token_time - r.arrival
+                                  <= spec.ttft_target for r in sub])
+                    att = f" SLO({spec.ttft_target:g}t)={ok:.0%}"
+                print(f"[serve]   tier {spec.name:<10} n={len(sub):4d} "
+                      f"TTFT p50={tt[0]:.1f} p95={tt[1]:.1f}{att}")
 
 
 def run_drain_mode(args, cfg, model, params):
@@ -203,6 +226,13 @@ def main():
                     help="chunked-prefill width: prompts longer than this "
                          "admit in fixed-size chunks interleaved with decode "
                          "(0 = single-shot prefill)")
+    ap.add_argument("--tiers", default="",
+                    help="SLO tier mix 'name:share:wWEIGHT[:ttft],...' e.g. "
+                         "'premium:0.2:w5:4,standard:0.5:w2,batch:0.3:w1' — "
+                         "share of traffic, weighted-deficit admission "
+                         "weight, optional TTFT target in ticks (control "
+                         "mode; default: single tier, identical to the "
+                         "untiered scheduler)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -51,6 +51,21 @@ admission cost is therefore O(distinct bucket shapes) per tick instead of
 O(replicas). ``metrics()['prefill_dispatches']`` counts this tick's
 admission dispatches (mirroring ``decode_dispatches``); set
 ``fleet_prefill=False`` to keep per-replica admission as the A/B oracle.
+
+**SLO tiers.** Pass a ``workload.trace.TierSet`` (and create replicas with
+the same ``tiers=``) to serve several QoS classes over one pool: every
+replica queue becomes a weighted-deficit ``TieredQueue`` (premium admits
+first, batch keeps a bounded non-starving share) and ``metrics()`` grows the
+per-tier view the control plane observes — ``tier_queue`` (T, N) depths,
+``tier_pressure`` (N,) weighted backlog for the GPSO SLO cost term,
+``tier_ttft``/``tier_tbt`` means over this tick's completions,
+``tier_served`` counts and the scalar ``tier_slo_cost`` feeding the
+tier-weighted Eq.5 reward. Re-queue paths (drain hand-back, failure
+evacuation, dead-node re-route) merge work back in original-arrival order,
+so churn never scrambles the starvation accounting. Tiering reorders which
+requests admit first; the fleet dispatch bounds (one decode dispatch per
+group per tick, one prefill dispatch per distinct bucket shape) are
+untouched.
 """
 from __future__ import annotations
 
@@ -60,20 +75,36 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.serving.engine import (FleetGroup, ReplicaEngine, Request,
-                                  normalize_fractions)
+                                  TieredQueue, normalize_fractions)
+from repro.workload.trace import DEFAULT_TIERS, TierSet
 
 _SERVICE_RATE_WARMUP = 8       # measured-rate ticks before the EMA is trusted
 _SERVICE_RATE_ALPHA = 0.1
 
 
+def _requeue_merged(queue, reqs) -> None:
+    """Merge re-queued work back into ``queue`` (deque or TieredQueue)
+    preserving *global* arrival order (rid tiebreak). Drain hand-backs and
+    failure re-queues must not append or prepend blindly: either loses the
+    original arrival ordering the tiered starvation accounting (and plain
+    FIFO fairness) relies on."""
+    merged = sorted(list(queue) + list(reqs),
+                    key=lambda r: (r.arrival, r.rid))
+    queue.clear()
+    for r in merged:
+        queue.append(r)
+
+
 class _Node:
     __slots__ = ("live", "draining", "spawning", "queue", "credit")
 
-    def __init__(self):
+    def __init__(self, tiers: TierSet):
         self.live: list = []        # serving ReplicaEngines
         self.draining: list = []    # finishing in-flight work, no admits
         self.spawning: list = []    # remaining cold-start ticks per add
-        self.queue: deque = deque() # node-level request queue
+        # node-level request queue: tier-aware (the deep backlog lives here
+        # — replica queues only buffer up to max_batch), single-tier == FIFO
+        self.queue: TieredQueue = TieredQueue(tiers)
         self.credit: dict = {}      # engine id -> fractional step credit
 
     def unfinished(self) -> int:
@@ -92,9 +123,11 @@ class ElasticClusterFrontend:
                  request_factory: Optional[Callable[[int, int], Request]] = None,
                  tick_seconds: float = 1.0, seed: int = 0,
                  est_tokens: float = 8.0, fleet_batch: bool = True,
-                 fleet_prefill: bool = True):
+                 fleet_prefill: bool = True,
+                 tiers: Optional[TierSet] = None):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
+        self.tiers = tiers or DEFAULT_TIERS
         self.provisioning_delay = int(provisioning_delay)
         self.max_replicas_per_node = max_replicas_per_node
         self.failure_rate = failure_rate
@@ -103,7 +136,7 @@ class ElasticClusterFrontend:
         self.fleet_batch = fleet_batch
         self.fleet_prefill = fleet_prefill and fleet_batch
         self.rng = np.random.default_rng(seed)
-        self.nodes = [_Node() for _ in range(num_nodes)]
+        self.nodes = [_Node(self.tiers) for _ in range(num_nodes)]
         self._rid = 0                # engine ids (replicas ever created)
         self._req_id = 0             # auto-generated request ids
         self._acc = 0.0              # fractional-arrival accumulator
@@ -276,8 +309,9 @@ class ElasticClusterFrontend:
 
     def _drain(self, node: _Node, eng: ReplicaEngine):
         eng.draining = True
-        while eng.queue:                 # un-admitted work goes back
-            node.queue.append(eng.queue.popleft())
+        handed = list(eng.queue)         # un-admitted work goes back, merged
+        eng.queue.clear()                # in arrival order (not appended —
+        _requeue_merged(node.queue, handed)     # see _requeue_merged)
         node.live.remove(eng)
         node.draining.append(eng)
 
@@ -289,7 +323,11 @@ class ElasticClusterFrontend:
 
     def _fail(self, node: _Node, eng: ReplicaEngine):
         lost = eng.evacuate()
-        node.queue.extendleft(reversed(lost))   # retry lost work first
+        # lost work re-queues at its original arrival position (it is
+        # usually the oldest work on the node, so it retries first — but by
+        # arrival accounting, not by a blanket prepend that would jump any
+        # newer lost request ahead of older queued ones)
+        _requeue_merged(node.queue, lost)
         node.live.remove(eng)
         node.credit.pop(id(eng), None)
         self._leave_fleet(eng, restore=False)   # row dropped, not unstacked
@@ -331,8 +369,8 @@ class ElasticClusterFrontend:
         twin of the fluid sim's retry pool)."""
         for node in self.nodes:
             if node.queue and not node.live and not node.spawning:
-                while node.queue:
-                    self.pending.appendleft(node.queue.pop())
+                _requeue_merged(self.pending, node.queue)
+                node.queue.clear()
 
     def _route_pending(self):
         mask = self.up_mask()
@@ -345,13 +383,16 @@ class ElasticClusterFrontend:
 
     def _dispatch(self, node: _Node):
         """Fill free replica slots from the node queue (least-loaded first,
-        normalized by speed so fast replicas pull more work)."""
+        normalized by speed so fast replicas pull more work). The node
+        queue hands out work in tiered weighted-deficit order (``pop``, not
+        ``popleft``): the deep backlog lives here, so this is where premium
+        traffic overtakes — single-tier pops stay plain FIFO."""
         while node.queue:
             cands = [e for e in node.live if e.load < e.max_batch]
             if not cands:
                 return
             eng = min(cands, key=lambda e: e.load / max(e.speed, 1e-6))
-            eng.submit(node.queue.popleft())
+            eng.submit(node.queue.pop())
 
     def tick(self, arrival_rate: float = 0.0) -> dict:
         self.t += 1
@@ -443,6 +484,98 @@ class ElasticClusterFrontend:
             return None
         return float(self._srv_rate)
 
+    def tier_depths(self) -> np.ndarray:
+        """Per-tier unfinished work per node, (T, N) in tier declaration
+        order — node queues plus every replica's queued + in-flight slots.
+        Counts come from the structures' own per-tier bookkeeping
+        (``TieredQueue.depths`` / ``ReplicaEngine.tier_load``); a replica
+        built with a different tier config falls back to counting its
+        requests under the frontend's tier set."""
+        out = np.zeros((len(self.tiers), self.num_nodes), np.float32)
+        for i, node in enumerate(self.nodes):
+            out[:, i] += node.queue.depths()
+            for eng in list(node.live) + list(node.draining):
+                tl = eng.tier_load()
+                if len(tl) == len(self.tiers):
+                    out[:, i] += tl
+                else:
+                    for req in list(eng.queue) + \
+                            [r for r in eng.slots if r is not None]:
+                        out[self.tiers.index(req.tier), i] += 1
+        return out
+
+    def _overdue_waiting(self) -> dict:
+        """Per-tier count of requests still waiting for their first token
+        whose age already exceeds the tier's TTFT target. Without this, a
+        *starved* tier would report zero SLO violation — only completed
+        requests can register a miss, and the reward would go unpenalized
+        exactly when the tier is most violated."""
+        overdue = {n: 0 for n in self.tiers.names}
+        finite = [s for s in self.tiers.specs if np.isfinite(s.ttft_target)]
+        if not finite:
+            return overdue
+        pools = [self.pending]
+        for node in self.nodes:
+            pools.append(node.queue)
+            for eng in list(node.live) + list(node.draining):
+                pools.append(eng.queue)
+                pools.append(r for r in eng.slots if r is not None)
+        for pool in pools:
+            for req in pool:
+                if req.first_token_time is not None:
+                    continue
+                spec = self.tiers.specs[self.tiers.index(req.tier)]
+                if self.t - req.arrival > spec.ttft_target:
+                    overdue[spec.name] += 1
+        return overdue
+
+    def _tier_metrics(self, finished_now: list) -> dict:
+        """Per-tier latency/SLO view of this tick: queue depths, weighted
+        pressure (the GPSO SLO-cost signal), TTFT/TBT means over this
+        tick's completions and the tier-weighted SLO violation level the
+        Eq.5 reward consumes (this tick's target misses plus the
+        already-overdue waiting requests, so starvation is visible before
+        anything completes). Untiered frontends emit NO tier keys — the
+        control plane must keep planning with the original Eq.9/Eq.5
+        objectives, bit-identical to the pre-tier behavior (a single-tier
+        ``tier_pressure`` would be plain queue depth and silently flip the
+        planner onto the tiered fitness)."""
+        if len(self.tiers) <= 1:
+            return {}
+        tiers = self.tiers
+        tq = self.tier_depths()
+        overdue = self._overdue_waiting()
+        ttft: dict = {}
+        tbt: dict = {}
+        served: dict = {n: 0 for n in tiers.names}
+        viol: dict = {}
+        for spec in tiers.specs:
+            done = [r for r in finished_now if tiers.index(r.tier)
+                    == tiers.index(spec.name)]
+            served[spec.name] = len(done)
+            late = overdue[spec.name]
+            misses = late
+            if done:
+                ft = [r.first_token_time - r.arrival for r in done]
+                bt = [(r.finish_time - r.first_token_time)
+                      / max(len(r.output) - 1, 1) for r in done]
+                ttft[spec.name] = float(np.mean(ft))
+                tbt[spec.name] = float(np.mean(bt))
+                misses += sum(float(f > spec.ttft_target
+                                    or b > spec.tbt_target)
+                              for f, b in zip(ft, bt))
+            denom = len(done) + late
+            if denom:
+                viol[spec.name] = misses / denom
+        return {
+            "tier_queue": tq,
+            "tier_pressure": tiers.pressure(tq),
+            "tier_ttft": ttft,
+            "tier_tbt": tbt,
+            "tier_served": served,
+            "tier_slo_cost": tiers.slo_cost(viol),
+        }
+
     def _compute_metrics(self, finished_now: list, arrival_rate: float) -> dict:
         for r in finished_now:
             self._est_tokens += 0.05 * (len(r.output) - self._est_tokens)
@@ -491,6 +624,7 @@ class ElasticClusterFrontend:
             "fleet_groups": int(sum(1 for g in self._fleets.values()
                                     if len(g))),
             "service_rate": self.service_rate,
+            **self._tier_metrics(finished_now),
         }
 
     # ------------------------------------------------------------ draining

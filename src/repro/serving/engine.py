@@ -17,6 +17,19 @@ per-prompt oracle never sees). Opt back into buckets with
 Prompts longer than ``max_seq - 1`` are truncated to their last
 ``max_seq - 1`` tokens at admission (the KV pool can never overflow).
 
+**SLO tiers.** Each replica's pending queue is a ``TieredQueue``: one FIFO
+per priority class (``workload.trace.TierSet``), drained in weighted-deficit
+round-robin order — the top-weight tier admits first, lower-weight tiers are
+guaranteed a bounded admission share so batch work never starves. Tiering
+only reorders *which* requests enter the admission plans below; the dispatch
+structure (one fleet prefill per distinct bucket shape, one fleet decode per
+tick) is untouched, and the default single-tier configuration is
+bit-identical to the untiered scheduler. Two guards keep long low-tier
+prefills from degrading premium latency: a lower-tier chunk start yields the
+last free slot while higher-priority work waits, and under pressure at most
+one below-decoding-tier chunk cursor advances per tick (see
+``plan_admission`` / ``_chunk_due``).
+
 **Admission pipeline** (bucket → chunk → fleet slab). Each tick every
 stepping replica *plans* admission from its queue without dispatching
 (``plan_admission``): chunk-eligible prompts (longer than ``chunk_len``,
@@ -92,6 +105,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.workload.trace import DEFAULT_TIERS, TierSet
 
 # families whose prefill accepts per-row ``lengths`` (bucketed prompts are
 # exact). moe is deliberately absent: expert capacity scales with the padded
@@ -367,6 +381,98 @@ class _AdmitPlans:
     singles: list           # [(slot, req)]
 
 
+class TieredQueue:
+    """Per-tier FIFO queues drained in weighted-deficit round-robin order.
+
+    Each tier owns a FIFO deque and a deficit counter. ``peek``/``pop``
+    implement classic DRR with a unit request cost: when no backlogged tier
+    holds a full credit, every backlogged tier earns its quantum
+    (``weight / max_weight``), then the highest-priority tier with credit
+    supplies the next request. The top-weight tier therefore admits first
+    (its quantum is exactly 1.0), while a weight-w tier is still guaranteed
+    ~w/w_max of admissions under sustained higher-tier load — weighted
+    fairness with a hard no-starvation bound. Deficits persist across ticks
+    so short admission windows can't bias the long-run shares; an empty
+    tier's banked credit resets (no burst debt).
+
+    With a single tier the discipline degenerates to the plain FIFO deque
+    this class replaced: same pops, same order, bit-identical streams.
+    ``popleft``/``__iter__`` expose global arrival order for the drain and
+    failure hand-back paths, which must not apply scheduling priority."""
+
+    def __init__(self, tiers: TierSet):
+        self.tiers = tiers
+        self._qs = [deque() for _ in tiers.specs]
+        self._deficit = [0.0] * len(tiers)
+        wmax = max(float(w) for w in tiers.weights)
+        self._quantum = [float(w) / wmax for w in tiers.weights]
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._qs)
+
+    def __bool__(self) -> bool:
+        return any(self._qs)
+
+    def __iter__(self):
+        """All queued requests in global arrival order (rid tiebreak)."""
+        return iter(sorted((r for q in self._qs for r in q),
+                           key=lambda r: (r.arrival, r.rid)))
+
+    def append(self, req):
+        self._qs[self.tiers.index(getattr(req, "tier", "standard"))] \
+            .append(req)
+
+    def clear(self):
+        for q in self._qs:
+            q.clear()
+
+    def popleft(self):
+        """Earliest-arrival request across all tiers (hand-back order for
+        drain/evacuate — deliberately NOT the scheduling order)."""
+        cands = [q for q in self._qs if q]
+        if not cands:
+            raise IndexError("pop from an empty TieredQueue")
+        best = min(cands, key=lambda q: (q[0].arrival, q[0].rid))
+        return best.popleft()
+
+    def depths(self) -> list:
+        """Per-tier queue lengths (declaration order)."""
+        return [len(q) for q in self._qs]
+
+    def higher_waiting(self, tier_idx: int) -> bool:
+        """Any queued work in a strictly higher-priority tier?"""
+        rank = self.tiers._rank[tier_idx]
+        return any(self._qs[t] for t in self.tiers.priority[:rank])
+
+    def _head_tier(self, exclude) -> Optional[int]:
+        live = [t for t in self.tiers.priority
+                if self._qs[t] and t not in exclude]
+        if not live:
+            return None
+        for t, q in enumerate(self._qs):     # empty tiers bank no credit
+            if not q:
+                self._deficit[t] = 0.0
+        while True:
+            for t in live:                   # priority order within a round
+                if self._deficit[t] >= 1.0 - 1e-9:
+                    return t
+            for t in live:
+                self._deficit[t] += self._quantum[t]
+
+    def peek(self, exclude=()) -> Optional[tuple]:
+        """(tier_idx, request) the next ``pop`` would return, or None.
+        Idempotent: repeated peeks without a pop return the same head."""
+        t = self._head_tier(exclude)
+        return None if t is None else (t, self._qs[t][0])
+
+    def pop(self, exclude=()):
+        t = self._head_tier(exclude)
+        if t is None:
+            raise IndexError("pop from an empty TieredQueue")
+        self._deficit[t] -= 1.0
+        return self._qs[t].popleft()
+
+
 class FleetGroup:
     """Stacks the device state of same-shape replicas along a leading fleet
     axis and advances every member with one jitted dispatch per tick.
@@ -608,6 +714,7 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = -1               # -1: never stop early
     arrival: float = 0.0
+    tier: str = "standard"         # SLO tier name (see workload.trace)
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
@@ -628,7 +735,8 @@ class ReplicaEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0,
                  speed: float = 1.0, min_bucket: int = 8,
-                 bucket_prompts: Optional[bool] = None, chunk_len: int = 0):
+                 bucket_prompts: Optional[bool] = None, chunk_len: int = 0,
+                 tiers: Optional[TierSet] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -642,7 +750,8 @@ class ReplicaEngine:
         self.pos = np.zeros(max_batch, np.int32)       # next cache index
         self.last_tok = np.zeros(max_batch, np.int32)
         self.slots: list = [None] * max_batch
-        self.queue: deque = deque()
+        self.tiers = tiers or DEFAULT_TIERS
+        self.queue: TieredQueue = TieredQueue(self.tiers)
         self.clock = 0.0
         self.steps = 0
         self.prefill_dispatches = 0   # jitted admission dispatches issued
@@ -693,6 +802,15 @@ class ReplicaEngine:
     @property
     def load(self) -> int:
         return self.n_active + len(self.queue)
+
+    def tier_load(self) -> list:
+        """Per-tier unfinished count on this replica (declaration order):
+        queued + in-flight slots (mid-chunk included)."""
+        counts = self.queue.depths()
+        for req in self.slots:
+            if req is not None:
+                counts[self.tiers.index(req.tier)] += 1
+        return counts
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -791,16 +909,29 @@ class ReplicaEngine:
         """Pop admittable queue heads into reserved slots WITHOUT
         dispatching — the shared host half of both the standalone and the
         fleet-batched admission paths (identical plans keep the two modes in
-        lockstep). Chunk-eligible prompts just reserve a slot + cursor;
-        their first chunk runs in this step's chunk round."""
+        lockstep). Queue heads come out in the tiered weighted-deficit order
+        (see ``TieredQueue``): high-weight tiers admit first, low-weight
+        tiers keep a bounded share. Chunk-eligible prompts just reserve a
+        slot + cursor; their first chunk runs in this step's chunk round —
+        but a lower-tier chunk start *yields* the last free slot while
+        higher-priority work is waiting (a long batch-tier prefill would
+        otherwise hold the slot for ceil(len/chunk) ticks and lock premium
+        traffic out)."""
         plans = _AdmitPlans([], [])
         if self.draining:
             return plans
         free = [i for i in range(self.max_batch) if self.slots[i] is None]
-        while free and self.queue:
-            head = self.queue[0]
+        deferred: set = set()         # tiers whose chunk start yielded
+        while free:
+            picked = self.queue.peek(deferred)
+            if picked is None:
+                break
+            tier_idx, head = picked
             if self._chunkable(head):
-                req = self.queue.popleft()
+                if len(free) == 1 and self.queue.higher_waiting(tier_idx):
+                    deferred.add(tier_idx)    # leave the slot for premium
+                    continue
+                req = self.queue.pop(deferred)
                 slot = free.pop(0)
                 self.slots[slot] = req
                 self._chunks[slot] = _ChunkCursor(
@@ -809,13 +940,15 @@ class ReplicaEngine:
             if not self.bucket_prompts or getattr(head, "extras", None):
                 # exact-length single admit (audio / extras-carrying
                 # requests, and moe replicas by default)
-                plans.singles.append((free.pop(0), self.queue.popleft()))
+                plans.singles.append((free.pop(0), self.queue.pop(deferred)))
                 continue
             group = []
-            while (self.queue and len(group) < len(free)
-                   and not getattr(self.queue[0], "extras", None)
-                   and not self._chunkable(self.queue[0])):
-                group.append(self.queue.popleft())
+            while len(group) < len(free):
+                nxt = self.queue.peek(deferred)
+                if nxt is None or getattr(nxt[1], "extras", None) \
+                        or self._chunkable(nxt[1]):
+                    break
+                group.append(self.queue.pop(deferred))
             plans.bucketed.append(([free.pop(0) for _ in group], group))
         return plans
 
@@ -829,11 +962,36 @@ class ReplicaEngine:
             self._admit_batch(slots, reqs, finished, bucketed=True)
 
     # --------------------------------------------------------------- chunks
+    def _chunk_due(self) -> list:
+        """Mid-chunk slots due to advance this step, tier-throttled: a
+        cursor whose tier is strictly below some *decoding* slot's tier is
+        "pressured" — its chunk compute would stretch the tick every one of
+        those higher-tier slots' next token waits on. Under pressure at most
+        ONE such low-tier cursor advances per step (the highest-priority,
+        lowest-slot one), so a long batch-tier prefill streams through
+        without inflating premium TBT by more than one chunk row. Cursors at
+        or above every decoding tier (and everything in single-tier mode)
+        advance unthrottled."""
+        slots = sorted(self._chunks)
+        if len(self.tiers) <= 1 or not slots:
+            return slots
+        decoding = [self.tiers.rank(req.tier)
+                    for s, req in enumerate(self.slots)
+                    if req is not None and s not in self._chunks]
+        if not decoding:
+            return slots
+        best = min(decoding)                  # rank 0 = highest priority
+        rank = lambda s: self.tiers.rank(self._chunks[s].req.tier)
+        calm = [s for s in slots if rank(s) <= best]
+        pressured = sorted((s for s in slots if rank(s) > best),
+                           key=lambda s: (rank(s), s))
+        return sorted(calm + pressured[:1])
+
     def _chunk_rows(self):
         """This step's chunk work items:
         (slot, toks (chunk_len,), offset, true_len, fresh, final)."""
         rows = []
-        for slot in sorted(self._chunks):
+        for slot in self._chunk_due():
             cur = self._chunks[slot]
             off = cur.consumed
             ln = min(self.chunk_len, len(cur.prompt) - off)

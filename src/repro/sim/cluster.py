@@ -12,6 +12,18 @@ plus the operational realities the paper's framework must survive at scale:
 cold-start provisioning delay for new replicas, Poisson node failures with
 repair times (queued work is re-routed), and straggler nodes with degraded
 capacity. The tick update is a single jit'd function over (N,)-arrays.
+
+**SLO tiers.** With ``tiers=TierSet(...)`` the per-node backlog is tracked
+per priority class, mirroring the request-level engine's tiered queues:
+arrivals split by tier share, and each node's served capacity drains tiers
+in priority order (premium first — the fluid limit of weighted-deficit
+admission under saturation). The aggregate dynamics are byte-identical to
+the untiered sim (the same jit'd ``_tick_math`` runs on the summed queue);
+tiering adds the per-tier breakdown the control plane observes:
+``tier_queue`` (T, N), ``tier_pressure`` (N,) weighted backlog,
+``tier_response`` per-tier latency estimates and the tier-weighted
+``tier_slo_cost`` for the Eq.5 reward — the same metric keys the elastic
+backend emits, so OURS and the baselines rank identically sim <-> elastic.
 """
 from __future__ import annotations
 
@@ -22,6 +34,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.workload.trace import TierSet
 
 
 @dataclasses.dataclass
@@ -79,6 +93,7 @@ class ClusterSim:
     failures: bool = True
 
     heterogeneous: bool = True
+    tiers: Optional[TierSet] = None   # None -> untiered (single class)
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -87,6 +102,15 @@ class ClusterSim:
                                 self.cfg.provisioning_delay)
         self.service_time = 1.0 / self.unit_capacity
         self.tick_count = 0
+        # per-tier backlog breakdown (invariant: sums to state.queue). A
+        # single-tier set stays untiered: emitting tier_pressure (== plain
+        # queue depth) would silently flip the GPSO planner onto the tiered
+        # objective — the same guard the elastic backend applies, keeping
+        # the two backends' metric key sets identical per tier config.
+        self.tier_queue = None
+        if self.tiers is not None and len(self.tiers) > 1:
+            self.tier_queue = np.zeros((len(self.tiers), self.cfg.num_nodes),
+                                       np.float32)
         # mixed hardware generations: persistent per-node speed multipliers
         if self.heterogeneous:
             self.node_speed = self.rng.choice(
@@ -142,9 +166,12 @@ class ClusterSim:
             s.up[fail] = 0.0
             s.down_left[fail] = self.rng.geometric(1.0 / cfg.node_mttr,
                                                    fail.sum())
-            # failed nodes drop their queue into the retry pool
+            # failed nodes drop their queue into the retry pool (tier
+            # identity dissolves there; re-arrivals re-split by share)
             s.retry_pool += float(s.queue[fail].sum())
             s.queue[fail] = 0.0
+            if self.tier_queue is not None:
+                self.tier_queue[:, fail] = 0.0
         # stragglers: degradation episodes persist for a sampled duration
         # (like failures do). Onset probability is normalized by the mean
         # episode length so the steady-state degraded node fraction stays
@@ -176,7 +203,7 @@ class ClusterSim:
         s.queue = np.array(q2)  # np.array (copy): np.asarray of a jax array
         self.tick_count += 1    # is read-only and failure events mutate it
         util_np = np.asarray(util)
-        return {
+        m = {
             "utilization": util_np,
             "mean_utilization": float(np.mean(util_np[s.up > 0.5])
                                       if (s.up > 0.5).any() else 0.0),
@@ -188,6 +215,52 @@ class ClusterSim:
             "up": s.up.copy(),
             "active_replicas": s.active.copy(),
             "replica_ticks": int(s.active.sum()),
+        }
+        if self.tier_queue is not None:
+            m.update(self._tier_tick(
+                arrivals * cfg.tick_seconds * np.asarray(fractions,
+                                                         np.float64),
+                np.asarray(served, np.float64), cap))
+        return m
+
+    def _tier_tick(self, node_arrivals: np.ndarray, served: np.ndarray,
+                   cap: np.ndarray) -> dict:
+        """Per-tier bookkeeping around the aggregate update: split this
+        tick's arrivals by tier share, drain each node's served mass through
+        the tiers in priority order (premium first), and emit the same
+        per-tier metric keys the elastic backend computes. The aggregate
+        queue is untouched — Σ_t tier_queue == state.queue stays invariant
+        up to float rounding."""
+        tiers = self.tiers
+        tq = self.tier_queue
+        tq += tiers.shares[:, None] * node_arrivals[None, :]
+        remaining = served.copy()
+        for t in tiers.priority:              # premium drains first
+            take = np.minimum(tq[t], remaining)
+            tq[t] -= take
+            remaining -= take
+        np.clip(tq, 0.0, None, out=tq)
+        # per-tier response estimate: a tier's marginal request waits behind
+        # all backlog at its priority or higher, then one service time
+        resp = {}
+        viol = {}
+        ahead = np.zeros(tq.shape[1], np.float64)
+        up = self.state.up > 0.5
+        for t in tiers.priority:
+            ahead += tq[t]
+            per_node = np.where(cap > 1e-9, ahead / np.maximum(cap, 1e-9),
+                                10.0) + self.service_time
+            spec = tiers.specs[t]
+            r = float(np.mean(per_node[up]) if up.any() else 10.0)
+            resp[spec.name] = r
+            if np.isfinite(spec.ttft_target):
+                viol[spec.name] = float(np.clip(
+                    r / spec.ttft_target - 1.0, 0.0, 1.0))
+        return {
+            "tier_queue": tq.copy(),
+            "tier_pressure": tiers.pressure(tq),
+            "tier_response": resp,
+            "tier_slo_cost": tiers.slo_cost(viol),
         }
 
     # ------------------------------------------------------- observations

@@ -1,3 +1,4 @@
 from repro.workload.trace import (  # noqa: F401
-    LOAD_LEVELS, TraceConfig, generate_trace, make_forecast_dataset,
+    DEFAULT_TIERS, LOAD_LEVELS, TierSet, TierSpec, TraceConfig,
+    generate_trace, make_forecast_dataset, parse_tiers,
 )

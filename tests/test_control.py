@@ -227,16 +227,22 @@ def _parity_cfg():
 
 N_NEW = 4          # fixed decode length -> replica rate = max_batch / N_NEW
 
+_PARITY_TIERS = None     # module default: untiered
 
-def _run_elastic(m, params, cfg, arrivals, scaler):
+
+def _run_elastic(m, params, cfg, arrivals, scaler, tiers=None):
     def request_factory(rid, tick):
-        return Request(rid, [1 + rid % 50, 2, 3, 4], max_new_tokens=N_NEW)
+        req = Request(rid, [1 + rid % 50, 2, 3, 4], max_new_tokens=N_NEW)
+        if tiers is not None:
+            req.tier = tiers.names[rid % len(tiers)]
+        return req
 
     fe = ElasticClusterFrontend(
         _factory(m, params, max_batch=2), cfg.num_nodes, initial_replicas=1,
         provisioning_delay=cfg.provisioning_delay,
         max_replicas_per_node=cfg.max_replicas_per_node,
-        request_factory=request_factory, seed=0, est_tokens=N_NEW)
+        request_factory=request_factory, seed=0, est_tokens=N_NEW,
+        tiers=tiers)
     plane = ControlPlane(cfg, fe, balancer="rr", scaler=scaler,
                          unit_capacity=2.0 / N_NEW, seed=0,
                          init_arrival=float(arrivals[:5].mean()))
@@ -244,9 +250,9 @@ def _run_elastic(m, params, cfg, arrivals, scaler):
                            unit_capacity=2.0 / N_NEW)
 
 
-def _run_sim(cfg, arrivals, scaler):
+def _run_sim(cfg, arrivals, scaler, tiers=None):
     sim = ClusterSim(cfg, 2.0 / N_NEW, seed=0, failures=False,
-                     heterogeneous=False)
+                     heterogeneous=False, tiers=tiers)
     plane = ControlPlane(cfg, SimBackend(sim), balancer="rr", scaler=scaler,
                          unit_capacity=2.0 / N_NEW, seed=0,
                          init_arrival=float(arrivals[:5].mean()))
@@ -254,12 +260,8 @@ def _run_sim(cfg, arrivals, scaler):
                            unit_capacity=2.0 / N_NEW)
 
 
-def test_method_ranking_matches_across_backends(setup):
-    """The same ControlPlane over the fluid sim and the request-level engine
-    must rank scaling policies identically: under a saturating trace, the
-    rule-based autoscaler beats the static allocation on response time on
-    BOTH backends (the paper's qualitative claim, ported to real forwards)."""
-    c, m, params = setup
+def _ranking_parity(m, params, tiers=None):
+    """Shared body: static vs rbas ranking must agree sim <-> elastic."""
     # 1.6 req/tick vs static capacity of 2 nodes x 1 replica x 0.5 req/tick:
     # static saturates, the autoscaler can double capacity.
     arrivals = np.full(36, 1.6, np.float32)
@@ -268,15 +270,39 @@ def test_method_ranking_matches_across_backends(setup):
     for backend in ("sim", "engine"):
         res = {}
         for scaler in ("static", "rbas"):
-            runner = _run_sim if backend == "sim" else _run_elastic
             if backend == "sim":
-                r = runner(cfg, arrivals, scaler)
+                r = _run_sim(cfg, arrivals, scaler, tiers=tiers)
             else:
-                r = runner(m, params, cfg, arrivals, scaler)
+                r = _run_elastic(m, params, cfg, arrivals, scaler,
+                                 tiers=tiers)
             res[scaler] = r.summary(warmup=8)["mean_resp"]
         rankings[backend] = sorted(res, key=res.get)
     assert rankings["sim"] == rankings["engine"]
     assert rankings["sim"][0] == "rbas"   # autoscaling wins under saturation
+
+
+def test_method_ranking_matches_across_backends(setup):
+    """The same ControlPlane over the fluid sim and the request-level engine
+    must rank scaling policies identically: under a saturating trace, the
+    rule-based autoscaler beats the static allocation on response time on
+    BOTH backends (the paper's qualitative claim, ported to real forwards)."""
+    c, m, params = setup
+    _ranking_parity(m, params)
+
+
+def test_method_ranking_matches_across_backends_3tier(setup):
+    """Backend-ranking parity holds under SLO-tiered traffic too: both
+    backends run the tiered queues/metrics path (premium-first fluid drain
+    vs weighted-deficit request admission) and still rank the scaling
+    policies identically."""
+    from repro.workload import TierSet, TierSpec
+
+    c, m, params = setup
+    tiers = TierSet([TierSpec("premium", share=0.34, weight=5.0,
+                              ttft_target=4.0),
+                     TierSpec("standard", share=0.33, weight=2.0),
+                     TierSpec("batch", share=0.33, weight=1.0)])
+    _ranking_parity(m, params, tiers=tiers)
 
 
 def test_ours_stack_runs_on_elastic_backend(setup):
