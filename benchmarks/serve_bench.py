@@ -20,12 +20,20 @@ Phases over real CPU forwards:
     scheduler: per-tier TTFT/TBT p50/p95 + SLO attainment, the batch tier's
     max wait (starvation bound), aggregate tok/s both ways and the fleet
     dispatch bounds under tiering (ordering changes, dispatches don't);
-  * **tick-cost scaling** — saturated steps/sec at fleet sizes 1/2/4/8 on
-    one node (a fleet-batched hot loop should be near-flat: tick cost is one
-    dispatch regardless of replica count);
+  * **tick-cost scaling + async A/B** — saturated ticks/sec at fleet sizes
+    1/2/4/8 on one node, paired async-tick vs eager-oracle (same workload,
+    interleaved chunks), reporting ``syncs_per_tick`` (async must pay ONE
+    blocking sync per tick; eager pays one per fetch) and the
+    host-vs-device tick-wall split (``sync_wait`` fraction). At the largest
+    size a ``decode_block=4`` arm fuses 4 micro-steps per dispatch —
+    dispatches AND syncs drop to 1/4 per tick;
   * **control-plane run** — the original ControlPlane-driven trace for
     TTFT/latency percentiles and the prefill retrace bound, plus the int8
     KV-cache capacity gain (``cache_dtype="int8"``).
+
+Tick-wall stats separate *steady-state* ticks from ticks that hit an XLA
+compile (``serve_kernel_traces`` delta > 0): a single ~1s retrace inside a
+40-tick window used to masquerade as a fat p95 tail.
 
 Artifacts: ``results/BENCH_serve.json`` — tracked across PRs so serving-path
 regressions (throughput, recompiles, dispatch counts) show up in review.
@@ -230,30 +238,44 @@ def bench_chunked(model, params, cfg) -> dict:
                            rng.integers(1, cfg.vocab_size, plen).tolist(),
                            max_new_tokens=N_NEW)
 
+        # eager ticks: this phase isolates CHUNKING's effect on the
+        # tick-wall tail; the async tick would smear a single-shot long
+        # prefill's cost across neighboring ticks and confound the A/B
         fe = ElasticClusterFrontend(
             mk, NODES, initial_replicas=2, max_replicas_per_node=2,
-            request_factory=rf, seed=0, est_tokens=N_NEW)
+            request_factory=rf, seed=0, est_tokens=N_NEW, async_tick=False)
         for _ in range(24):                  # warm compiles + fill slots
             fe.tick(1.0)                     # (long: every admission/chunk
                                              # batch shape must compile
                                              # before the timed window)
-        tick_wall = []
+        tick_wall = []                       # (wall_s, compiled?, sync_s)
         for _ in range(40):
+            traces0 = fe.serve_kernel_traces()
+            sync0 = fe.sync_wait_s()
             t0 = time.perf_counter()
             fe.tick(1.0)
-            tick_wall.append(time.perf_counter() - t0)
+            tick_wall.append((time.perf_counter() - t0,
+                              fe.serve_kernel_traces() - traces0,
+                              fe.sync_wait_s() - sync0))
         fe.run_until_drained()
         short = [r for r in fe.finished if len(r.prompt) < CHUNK_LONG]
         longs = [r for r in fe.finished if len(r.prompt) >= CHUNK_LONG]
         ttft = [r.first_token_time - r.arrival for r in short]
         lttft = [r.first_token_time - r.arrival for r in longs]
+        # steady-state ticks only: a tick that hit an XLA retrace (~1s) is
+        # a cold-path event, not the serving tail the p95 is meant to bound
+        steady = [w for w, d, _ in tick_wall if d == 0]
+        sync_s = [s for _, d, s in tick_wall if d == 0]
         return {
             "ttft_p95_ticks": float(np.percentile(ttft, 95)),
             "long_ttft_p95_ticks": float(np.percentile(lttft, 95)),
             "tick_wall_p95_ms":
-                round(float(np.percentile(tick_wall, 95)) * 1e3, 2),
+                round(float(np.percentile(steady, 95)) * 1e3, 2),
             "tick_wall_mean_ms":
-                round(float(np.mean(tick_wall)) * 1e3, 2),
+                round(float(np.mean(steady)) * 1e3, 2),
+            "tick_wall_sync_mean_ms":        # device-blocked share; the
+                round(float(np.mean(sync_s)) * 1e3, 2),  # rest is host work
+            "compile_ticks": int(sum(1 for _, d, _ in tick_wall if d)),
         }
 
     on, off = run(CHUNK_LEN), run(0)
@@ -382,38 +404,118 @@ def bench_tiers(model, params, cfg) -> dict:
     }}
 
 
+TICK_MODES = (("async", dict(async_tick=True)),
+              ("eager", dict(async_tick=False)),
+              ("block4", dict(async_tick=True, decode_block=4)))
+
+
 def bench_tick_scaling(model, params, cfg) -> dict:
-    """Saturated steps/sec vs fleet size (flat curve == batched hot loop)."""
+    """Saturated ticks/sec vs fleet size, paired async/eager (+ fused
+    decode blocks at every size).
+
+    The async tick must pay exactly ONE blocking host sync per tick (the
+    reconcile) regardless of fleet size, with the decode dispatch of tick t
+    overlapping tick t's host bookkeeping; decode_block=4 drops both the
+    dispatch and the sync to 1/4 per tick (the slab is saturated, the queue
+    is deep, so no admissions interrupt the fused windows). Interleaved
+    tick chunks so machine noise hits every mode equally."""
     from repro.serving import ElasticClusterFrontend, Request
 
-    steps_per_s = {}
-    for size in FLEET_SIZES:
-        fe = ElasticClusterFrontend(
-            _mk(model, params, cfg), 1, initial_replicas=size,
-            max_replicas_per_node=size, seed=0, est_tokens=N_NEW)
-        rid = 0
-        rng = np.random.default_rng(1)
+    out = {"steps_per_s": {}, "steps_per_s_eager": {},
+           "steps_per_s_block4": {}}
+    key_of = {"async": "steps_per_s", "eager": "steps_per_s_eager",
+              "block4": "steps_per_s_block4"}
 
-        def refill():
-            nonlocal rid
+    class _Feeder:
+        """Keeps one frontend saturated (slab full + deep queue) with an
+        identical request stream per mode. 48-token outputs keep the timed
+        window (44 ticks incl. warmup) inside the generation horizon: pure
+        decode, no finishes, no admission retraces."""
+
+        def __init__(self, fe, size):
+            self.fe, self.size = fe, size
+            self.rid = 0
+            self.rng = np.random.default_rng(1)
+
+        def refill(self):
+            fe = self.fe
             while (len(fe.pending) + sum(n.unfinished() for n in fe.nodes)
-                   < 2 * size * MAX_BATCH):
-                plen = int(rng.integers(2, 14))
+                   < 2 * self.size * MAX_BATCH):
+                plen = int(self.rng.integers(2, 14))
                 fe.submit(Request(
-                    rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
-                    max_new_tokens=32))
-                rid += 1
+                    self.rid,
+                    self.rng.integers(1, cfg.vocab_size, plen).tolist(),
+                    max_new_tokens=48))
+                self.rid += 1
 
-        for _ in range(3):                 # warm compiles + fill slots
-            refill()
-            fe.tick(0.0)
-        t0 = time.time()
-        timed = 12
-        for _ in range(timed):
-            refill()
-            fe.tick(0.0)
-        steps_per_s[str(size)] = round(timed / max(time.time() - t0, 1e-9), 2)
-    return {"steps_per_s": steps_per_s}
+    stats = {}
+    for size in FLEET_SIZES:
+        fes = {}
+        feeders = {}
+        for mode, kw in TICK_MODES:
+            fe = ElasticClusterFrontend(
+                _mk(model, params, cfg), 1, initial_replicas=size,
+                max_replicas_per_node=size, seed=0, est_tokens=N_NEW, **kw)
+            fes[mode] = fe
+            feeders[mode] = _Feeder(fe, size)
+            for _ in range(8):             # warm compiles + fill slots
+                feeders[mode].refill()
+                fe.tick(0.0)
+        walls = {m: [] for m in fes}       # (tick wall, compiled?) pairs
+        syncs = {m: 0 for m in fes}
+        disp = {m: 0 for m in fes}
+        sync_wait = {m: 0.0 for m in fes}
+        order = list(fes)
+        for _ in range(6):                 # interleaved, rotated 6-tick
+            for mode in order:             # chunks: noise hits all modes
+                fe = fes[mode]
+                feeders[mode].refill()
+                s0, w0, d0 = (fe.sync_count(), fe.sync_wait_s(),
+                              fe.decode_dispatches())
+                for _ in range(6):
+                    tr0 = fe.serve_kernel_traces()
+                    t0 = time.perf_counter()
+                    fe.tick(0.0)
+                    walls[mode].append((time.perf_counter() - t0,
+                                        fe.serve_kernel_traces() > tr0))
+                syncs[mode] += fe.sync_count() - s0
+                sync_wait[mode] += fe.sync_wait_s() - w0
+                disp[mode] += fe.decode_dispatches() - d0
+            order = order[1:] + order[:1]
+        for mode in fes:
+            kept = [w for w, compiled in walls[mode] if not compiled]
+            out[key_of[mode]][str(size)] = round(
+                len(kept) / max(sum(kept), 1e-9), 2)
+        n = {m: len(walls[m]) for m in fes}
+        stats[size] = {m: (syncs[m] / n[m], disp[m] / n[m],
+                           sync_wait[m] / max(sum(w for w, _ in walls[m]),
+                                              1e-9))
+                       for m in fes}
+    big = max(FLEET_SIZES)
+    s8 = stats[big]
+    out.update({
+        # methodology changed in PR 5: steps_per_s is now steady-state
+        # ticks/sec over compile-free per-tick walls (feeder refill and
+        # XLA retraces excluded), where earlier PRs timed a raw
+        # ticks/elapsed window — cross-PR comparisons of this key straddle
+        # that change
+        "steps_per_s_method": "steady-state per-tick walls, compile ticks "
+                              "and feeder excluded (PR 5); previously raw "
+                              "window ticks/elapsed",
+        "async_speedup_8": round(
+            out["steps_per_s"][str(big)]
+            / max(out["steps_per_s_eager"][str(big)], 1e-9), 3),
+        "block4_speedup_8": round(
+            out["steps_per_s_block4"][str(big)]
+            / max(out["steps_per_s_eager"][str(big)], 1e-9), 3),
+        "syncs_per_tick": round(s8["async"][0], 3),
+        "syncs_per_tick_eager": round(s8["eager"][0], 3),
+        "syncs_per_tick_block4": round(s8["block4"][0], 3),
+        "decode_dispatches_per_tick_block4": round(s8["block4"][1], 3),
+        "sync_wait_frac_8": round(s8["async"][2], 3),
+        "sync_wait_frac_8_eager": round(s8["eager"][2], 3),
+    })
+    return out
 
 
 def bench_int8_capacity(model) -> dict:
@@ -527,7 +629,14 @@ def main() -> list:
          blob["tiers"]["batch_ttft_max_tiered"] * 1e6,
          "batch-tier starvation bound (ticks)"),
         ("serve/steps_per_s_8_replicas", 1e6 / max(flat["8"], 1e-9),
-         f"1rep={flat['1']}/s 8rep={flat['8']}/s"),
+         f"1rep={flat['1']}/s 8rep={flat['8']}/s "
+         f"(eager {blob['steps_per_s_eager']['8']}/s, "
+         f"block4 {blob['steps_per_s_block4']['8']}/s)"),
+        ("serve/async_speedup_8", blob["async_speedup_8"] * 1e6,
+         f"block4 {blob['block4_speedup_8']}x vs eager"),
+        ("serve/syncs_per_tick", blob["syncs_per_tick"] * 1e6,
+         f"eager {blob['syncs_per_tick_eager']}, "
+         f"block4 {blob['syncs_per_tick_block4']}"),
         ("serve/ttft_p95", blob["ttft_p95_ticks"] * 1e6,
          f"p50={blob['ttft_p50_ticks']:.1f}t"),
         ("serve/latency_p95", blob["latency_p95_ticks"] * 1e6,

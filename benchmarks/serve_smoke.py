@@ -15,7 +15,12 @@ Guards the admission-path invariants cheap enough for every PR:
     no worse than the untiered FIFO baseline on the identical workload,
     (b) still finish every batch-tier request (no starvation), and (c)
     keep the fleet dispatch bounds: tiering reorders which rows enter the
-    one fleet prefill/decode per tick, it never adds dispatches.
+    one fleet prefill/decode per tick, it never adds dispatches;
+  * **async tick contract** — on the same 3-tier config the (default)
+    async tick must pay at most ONE blocking host sync per tick
+    (``metrics()['syncs'] <= 1``, admissions included) and produce token
+    streams bit-identical to the eager oracle; with ``decode_block=4`` the
+    fused windows must engage (total syncs / ticks < 1).
 
 Exits non-zero on violation (plain asserts); prints the measured numbers so
 CI logs double as a mini-benchmark.
@@ -109,32 +114,36 @@ def main():
                      TierSpec("batch", share=0.33, weight=1.0)])
     burst = [rng.integers(1, cfg.vocab_size, 6).tolist() for _ in range(24)]
 
-    def tier_burst(ts):
+    def tier_burst(ts, async_tick=True, decode_block=1, n_new=3):
         def mk(rid):
             return ReplicaEngine(model, params, max_batch=MAX_BATCH,
                                  max_seq=MAX_SEQ, rid=rid, tiers=ts)
         fe = ElasticClusterFrontend(mk, 1, initial_replicas=2,
                                     max_replicas_per_node=2, seed=0,
-                                    tiers=ts)
+                                    async_tick=async_tick,
+                                    decode_block=decode_block, tiers=ts)
         for i, p in enumerate(burst):
-            req = Request(i, list(p), max_new_tokens=3)
+            req = Request(i, list(p), max_new_tokens=n_new)
             if ts is not None:
                 req.tier = tiers.names[i % 3]
             fe.submit(req)
         admit_m = fe.tick(0.0)
-        max_decode = 0.0
-        for _ in range(100):
+        max_decode, max_syncs, ticks = 0.0, admit_m["syncs"], 1
+        for _ in range(200):
             m = fe.tick(0.0)
+            ticks += 1
             if m["decode_dispatches"]:
                 max_decode = max(max_decode, m["decode_dispatches"]
                                  / max(m["fleet_groups"], 1))
+            if async_tick:
+                max_syncs = max(max_syncs, m["syncs"])
             if not fe.pending and all(n.unfinished() == 0
                                       for n in fe.nodes):
                 break
-        return fe, admit_m, max_decode
+        return fe, admit_m, max_decode, max_syncs, ticks
 
-    fe_t, admit_t, dec_t = tier_burst(tiers)
-    fe_u, admit_u, _ = tier_burst(None)
+    fe_t, admit_t, dec_t, sync_t, _ = tier_burst(tiers)
+    fe_u, admit_u, _, _, _ = tier_burst(None)
 
     def ttft95(fe, pred):
         return float(np.percentile(
@@ -157,6 +166,29 @@ def main():
     assert admit_t["prefill_dispatches"] <= admit_u["prefill_dispatches"]
     assert dec_t <= 1.0, \
         "tiering must keep ONE fleet decode dispatch per group per tick"
+
+    # ---- async tick: syncs_per_tick bound + eager stream parity -------
+    assert sync_t <= 1, \
+        "async tick must pay at most ONE blocking sync per tick"
+    fe_e, _, _, _, _ = tier_burst(tiers, async_tick=False)
+    snap_async = snap(fe_t)
+    snap_eager = snap(fe_e)
+    assert snap_async == snap_eager, \
+        "async tick changed token streams vs the eager oracle"
+
+    # decode_block=4: longer outputs so fused windows engage once the
+    # admission wave passes; total syncs must amortize below 1/tick
+    fe_b, _, _, _, ticks_b = tier_burst(tiers, decode_block=4, n_new=16)
+    fe_r, _, _, _, _ = tier_burst(tiers, decode_block=1, n_new=16)
+    spt = fe_b.sync_count() / ticks_b
+    print(f"[smoke] async: max syncs/tick={sync_t} (streams == eager); "
+          f"decode_block=4: syncs/tick={spt:.2f} over {ticks_b} ticks")
+    assert spt < 1.0, "decode_block=4 must amortize syncs below 1/tick"
+    # finish ticks may lag <= K-1 inside fused windows; token content is
+    # the invariant
+    toks_b = sorted((r.rid, tuple(r.output)) for r in fe_b.finished)
+    toks_r = sorted((r.rid, tuple(r.output)) for r in fe_r.finished)
+    assert toks_b == toks_r, "fused decode blocks changed token content"
     print("[smoke] OK")
 
 

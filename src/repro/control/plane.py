@@ -15,6 +15,16 @@ Per tick (Eq.1-11):
 
 The same plane instance drives the fluid simulator (training, figures) and
 the request-level elastic engine (``repro.launch.serve``) unchanged.
+
+With the elastic backend's (default) overlapped async tick, step 3 returns
+after ONE blocking host sync: the forecast -> balance -> scale work of this
+loop runs while the accelerator computes the tick's decode, so a faster
+control cadence comes for free (``metrics()['sync_wait_s']`` is the only
+blocked time). The metrics the plane observes then describe the device
+state as of one tick earlier — scaling rules tolerate that lag by design
+(production autoscalers poll far staler signals); the eager backend mode
+(``async_tick=False``) restores synchronous observation when exact
+sim-parity of the control trajectory matters.
 """
 from __future__ import annotations
 

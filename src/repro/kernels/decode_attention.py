@@ -28,7 +28,7 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    *, scale, block_kv):
     ki = pl.program_id(2)
     n_kv = pl.num_programs(2)
-    pos = pos_ref[0]
+    pos = pos_ref[pl.program_id(0)]      # per-row cache length (SMEM)
 
     @pl.when(ki == 0)
     def _init():
@@ -65,9 +65,12 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 def flash_decode(q, k_cache, v_cache, pos, *, block_kv=DEFAULT_BLOCK_KV,
                  interpret=False):
-    """q: (B, Hq, d); caches: (B, Hkv, S, d); pos: scalar int32.
+    """q: (B, Hq, d); caches: (B, Hkv, S, d); pos: scalar int32 or (B,)
+    int32 (per-row cache lengths — the serving slot-pool layout, where every
+    slot sits at its own fill depth).
 
-    Returns (B, Hq, d). Attends over cache positions 0..pos inclusive.
+    Returns (B, Hq, d). Row b attends over cache positions 0..pos[b]
+    inclusive.
     """
     B, Hq, d = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
@@ -77,7 +80,12 @@ def flash_decode(q, k_cache, v_cache, pos, *, block_kv=DEFAULT_BLOCK_KV,
     assert S % block_kv == 0
     qg = q.reshape(B, Hkv, qpg, d)
     scale = 1.0 / np.sqrt(d)
-    pos_arr = jnp.asarray([pos], jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos_arr = jnp.full((B,), pos, jnp.int32)
+    else:
+        assert pos.shape == (B,), pos.shape
+        pos_arr = pos
 
     kernel = functools.partial(_decode_kernel, scale=scale, block_kv=block_kv)
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -34,6 +34,16 @@ batch:0.3:w1`` serves an SLO-tiered mix (share : weighted-deficit weight :
 optional TTFT target) through tiered replica queues, per-tier metrics and
 the tier-weighted Eq.5/Eq.9 objectives — the default single tier is
 bit-identical to the untiered scheduler.
+
+Tick-overlap flags: the serve tick is asynchronous by default — fleet
+dispatches return device futures reconciled at ONE host sync per tick, so
+host bookkeeping and the control plane overlap the device's decode
+(``--no-async`` restores the eager blocking tick as the bit-exact parity
+oracle); ``--decode-block K`` fuses K decode micro-steps into one dispatch
+and one sync on ticks that admit nothing (saturated decode pays 1/K syncs
+per tick, trading up to K-1 ticks of admission lag under a full slab);
+``--attn-backend pallas`` decodes attention through the flash-decode
+kernel (interpret mode off-TPU) instead of the dense einsum.
 """
 from __future__ import annotations
 
@@ -70,7 +80,8 @@ def run_control_loop(args, cfg, model, params):
         mb = int(rng.choice([max(2, args.max_batch // 2), args.max_batch]))
         return ReplicaEngine(model, params, max_batch=mb,
                              max_seq=args.max_seq, rid=rid, speed=speed,
-                             chunk_len=args.chunk_len, tiers=tiers)
+                             chunk_len=args.chunk_len, tiers=tiers,
+                             attn_backend=args.attn_backend)
 
     def request_factory(rid: int, tick: int) -> Request:
         plen = int(rng.integers(2, 12))
@@ -88,7 +99,9 @@ def run_control_loop(args, cfg, model, params):
         failure_rate=args.failure_rate, request_factory=request_factory,
         seed=args.seed, est_tokens=est_tokens,
         fleet_batch=not args.no_fleet,
-        fleet_prefill=not args.no_fleet_prefill, tiers=tiers)
+        fleet_prefill=not args.no_fleet_prefill,
+        async_tick=not args.no_async, decode_block=args.decode_block,
+        tiers=tiers)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -130,7 +143,9 @@ def run_control_loop(args, cfg, model, params):
           f"failed={fe.failed_replicas} "
           f"replica-ticks={fe.replica_ticks} "
           f"decode-dispatches={fe.decode_dispatches()} "
-          f"prefill-dispatches={fe.prefill_dispatches()}")
+          f"prefill-dispatches={fe.prefill_dispatches()} "
+          f"syncs={fe.sync_count()} "
+          f"sync-wait={fe.sync_wait_s():.2f}s")
     if done:
         ttft = _percentiles([r.first_token_time - r.arrival for r in done])
         lat = _percentiles([r.finish_time - r.arrival for r in done])
@@ -159,9 +174,16 @@ def run_drain_mode(args, cfg, model, params):
     from repro.serving.engine import (ClusterFrontend, ReplicaEngine,
                                       Request, total_prefill_traces)
 
+    if args.no_async or args.decode_block > 1:
+        # the static ClusterFrontend always runs the eager blocking tick;
+        # don't let an A/B arm silently not differ
+        print("[serve] note: --no-async/--decode-block apply to the "
+              "control-loop mode only; drain mode always ticks eagerly")
+
     replicas = [ReplicaEngine(model, params, max_batch=args.max_batch,
                               max_seq=args.max_seq, rid=i,
-                              chunk_len=args.chunk_len)
+                              chunk_len=args.chunk_len,
+                              attn_backend=args.attn_backend)
                 for i in range(args.replicas)]
     caps = np.ones(args.replicas)
 
@@ -222,6 +244,20 @@ def main():
     ap.add_argument("--no-fleet-prefill", action="store_true",
                     help="disable fleet-batched admission (per-replica "
                          "prefill dispatches; A/B baseline)")
+    ap.add_argument("--no-async", action="store_true",
+                    help="disable the overlapped async tick (eager blocking "
+                         "syncs after every dispatch; bit-exact parity "
+                         "oracle)")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="fuse K decode micro-steps into one dispatch+sync "
+                         "on ticks that admit nothing (async mode; 1 = one "
+                         "step per tick; >1 trades <= K-1 ticks of "
+                         "admission lag under a full slab)")
+    ap.add_argument("--attn-backend", default="einsum",
+                    choices=["einsum", "pallas"],
+                    help="decode attention backend: dense einsum reference "
+                         "or the Pallas flash-decode kernel (interpret mode "
+                         "off-TPU)")
     ap.add_argument("--chunk-len", type=int, default=0,
                     help="chunked-prefill width: prompts longer than this "
                          "admit in fixed-size chunks interleaved with decode "

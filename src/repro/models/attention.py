@@ -218,8 +218,21 @@ def write_kv(k_cache, v_cache, k_new, v_new, pos):
     return k_cache, v_cache
 
 
-def decode_attend(params, q, k_cache, v_cache, pos, dims: PaddedDims):
-    """Read-only attention of a single-token q over cache[0..pos]."""
+def decode_attend(params, q, k_cache, v_cache, pos, dims: PaddedDims,
+                  backend: str = "einsum"):
+    """Read-only attention of a single-token q over cache[0..pos].
+
+    ``backend="pallas"`` routes through the flash-decode kernel
+    (``repro.kernels.decode_attention``) instead of the dense einsum: the
+    online-softmax tiles the KV axis and skips blocks past the filled cache
+    length, so decode cost follows the *filled* cache. The serve cache
+    layout is (B, S, G, hd) while the kernel wants (B, G, S, hd) — the
+    transpose here is the price of keeping one cache layout for both
+    backends (a TPU deployment would store the pool kernel-native). Runs in
+    interpret mode off-TPU so the CPU parity tests exercise the same code
+    path."""
+    if backend == "pallas":
+        return _decode_attend_pallas(params, q, k_cache, v_cache, pos, dims)
     B = q.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     per_seq = pos.ndim == 1
@@ -235,6 +248,27 @@ def decode_attend(params, q, k_cache, v_cache, pos, dims: PaddedDims):
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bgqst,btgh->bsgqh", probs.astype(v_cache.dtype), v_cache)
+    ctx = _mask_pad_heads(ctx, dims)
+    ctx = ctx.reshape(B, 1, dims.n_q, -1)
+    return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"])
+
+
+def _decode_attend_pallas(params, q, k_cache, v_cache, pos, dims: PaddedDims):
+    """Flash-decode backend: grouped q (B,1,G,qpg,hd) and the (B,S,G,hd)
+    serve caches reshaped to the kernel's (B,Hq,d) / (B,G,S,d) layout, with
+    per-row ``pos`` forwarded as the kernel's scalar-prefetch lengths. The
+    padded-q-head mask applies after the kernel exactly like the einsum
+    path."""
+    from repro.kernels.decode_attention import flash_decode
+
+    B = q.shape[0]
+    hd = q.shape[-1]
+    qf = q.reshape(B, dims.n_kv * dims.q_per_group, hd)
+    kc = k_cache.swapaxes(1, 2)                  # (B,S,G,hd) -> (B,G,S,hd)
+    vc = v_cache.swapaxes(1, 2)
+    out = flash_decode(qf, kc.astype(qf.dtype), vc.astype(qf.dtype), pos,
+                       interpret=jax.default_backend() != "tpu")
+    ctx = out.reshape(B, 1, dims.n_kv, dims.q_per_group, hd)
     ctx = _mask_pad_heads(ctx, dims)
     ctx = ctx.reshape(B, 1, dims.n_q, -1)
     return jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"])

@@ -209,9 +209,11 @@ def lm_init_cache(cfg, dims, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
-              shard_fn=None):
+              shard_fn=None, attn_backend=None):
     """One decode step. tokens: (B,1) int32; pos: scalar int32 or (B,) int32
     (cache write index, counting any VLM patch prefix).
+    ``attn_backend="pallas"`` reads the cache through the flash-decode
+    kernel instead of the dense einsum (see ``attention.decode_attend``).
 
     The full stacked cache (L,B,S,G,hd) is the scan CARRY with in-place
     single-token writes — no per-layer cache stacking copies (the caches
@@ -221,6 +223,7 @@ def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
     the fly (the HBM stream is the int8 bytes + scales).
     """
     quant = "k_q" in cache
+    backend = attn_backend or "einsum"
     h = params["embed"][tokens]                              # (B,1,d)
     me = cfg.moe_every if "moe_layers" in params else 1
     n_groups = cfg.num_layers // me
@@ -242,7 +245,8 @@ def lm_decode(params, cache, tokens, pos, cfg: ArchConfig, dims: PaddedDims, *,
         cache = {k: jax.lax.dynamic_update_index_in_dim(cache[k], lc[k],
                                                         layer_idx, 0)
                  for k in cache}
-        y = attn.decode_attend(lp["attn"], q, kc, vc, pos, dims)
+        y = attn.decode_attend(lp["attn"], q, kc, vc, pos, dims,
+                               backend=backend)
         h = h + y
         h, _ = _ffn_sublayer(lp, h, cfg, shard_fn)
         return h, cache

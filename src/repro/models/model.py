@@ -178,11 +178,16 @@ class Model:
                                             lengths, c, d, shard_fn=shard_fn)
         raise ValueError(f"chunked prefill unsupported for {c.family!r}")
 
-    def decode(self, params, state, tokens, pos, shard_fn=None):
+    def decode(self, params, state, tokens, pos, shard_fn=None,
+               attn_backend=None):
+        """``attn_backend="pallas"`` (dense/moe/vlm only) decodes through
+        the flash-decode kernel; None/"einsum" keeps the dense reference
+        path. SSM/audio families carry no KV decode loop and ignore it."""
         c, d = self.cfg, self.dims
         if c.family in ("dense", "moe", "vlm"):
             return lm.lm_decode(params, state, tokens, pos, c, d,
-                                shard_fn=shard_fn)
+                                shard_fn=shard_fn,
+                                attn_backend=attn_backend)
         if c.family in ("ssm", "hybrid"):
             return ssm_lm.ssm_decode(params, state, tokens, pos, c, d,
                                      shard_fn=shard_fn)

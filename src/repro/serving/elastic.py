@@ -52,6 +52,30 @@ O(replicas). ``metrics()['prefill_dispatches']`` counts this tick's
 admission dispatches (mirroring ``decode_dispatches``); set
 ``fleet_prefill=False`` to keep per-replica admission as the A/B oracle.
 
+**Overlapped async ticks** (default with fleet batching): the fleet
+dispatch methods stop blocking on the device — decode/prefill/chunk results
+stay on the accelerator as pending futures (with the decode operands
+persistent on device, see ``engine`` module docstring) and the deferred host
+bookkeeping applies at ONE reconcile sync at the next tick's start. The host
+half of tick *t* (metrics, queues, tier accounting, the control plane's
+forecast→balance→scale) therefore overlaps the device computing tick *t*'s
+decode: steady-state cost is ``max(host, device)`` instead of their sum, at
+one blocking sync per fleet group per tick (``metrics()['syncs']``,
+mirroring ``decode_dispatches``; ``metrics()['sync_wait_s']`` is the wall
+time actually blocked — the host-vs-device tick breakdown). Token streams
+and finish ticks are bit-identical to ``async_tick=False`` (the eager parity
+oracle); only host-side *observation* — per-tick ``served``/latency metrics,
+drained detection — lags by one tick, and since retires reconcile before
+admission planning, a slot freed by tick *t*'s decode admits at *t+1*
+exactly like the eager path (admission lags device state by at most one
+tick under a full slab). Membership churn (drain retire, failure, scale-up)
+force-flushes pending futures before rows unstack. ``decode_block=K``
+additionally fuses K decode micro-steps into one dispatch+sync on ticks
+with no pending admissions or chunk cursors, dropping syncs/tick to 1/K in
+the saturated-decode regime — at the cost that a slot retiring mid-block
+re-admits only at the block-end reconcile (admission lag <= K-1 ticks
+under a full slab; see the engine docstring).
+
 **SLO tiers.** Pass a ``workload.trace.TierSet`` (and create replicas with
 the same ``tiers=``) to serve several QoS classes over one pool: every
 replica queue becomes a weighted-deficit ``TieredQueue`` (premium admits
@@ -123,7 +147,8 @@ class ElasticClusterFrontend:
                  request_factory: Optional[Callable[[int, int], Request]] = None,
                  tick_seconds: float = 1.0, seed: int = 0,
                  est_tokens: float = 8.0, fleet_batch: bool = True,
-                 fleet_prefill: bool = True,
+                 fleet_prefill: bool = True, async_tick: bool = True,
+                 decode_block: int = 1,
                  tiers: Optional[TierSet] = None):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
@@ -135,6 +160,12 @@ class ElasticClusterFrontend:
         self.tick_seconds = tick_seconds
         self.fleet_batch = fleet_batch
         self.fleet_prefill = fleet_prefill and fleet_batch
+        # the async tick needs the fleet dispatch paths end to end: with
+        # either oracle mode (per-replica decode or per-replica admission)
+        # the tick falls back to eager, blocking syncs
+        self.async_tick = bool(async_tick) and self.fleet_prefill
+        self.decode_block = max(1, int(decode_block)) if self.async_tick \
+            else 1
         self.rng = np.random.default_rng(seed)
         self.nodes = [_Node(self.tiers) for _ in range(num_nodes)]
         self._rid = 0                # engine ids (replicas ever created)
@@ -153,8 +184,13 @@ class ElasticClusterFrontend:
         self._fleets: dict = {}      # fleet_key -> FleetGroup (spans nodes)
         self._tick_dispatches = 0    # decode dispatches issued this tick
         self._tick_prefill_dispatches = 0  # admission dispatches this tick
+        self._tick_syncs = 0         # blocking host syncs this tick
+        self._tick_sync_wait = 0.0   # seconds blocked on device this tick
         self._retired_dispatches = 0  # dispatch counts of evicted groups
         self._retired_prefill_dispatches = 0  # of evicted groups + engines
+        self._retired_syncs = 0      # sync counts of evicted groups/engines
+        self._retired_sync_wait = 0.0
+        self._async_stash: list = []  # finishes flushed by mid-tick churn
         self._srv_rate: Optional[float] = None  # per-replica req/tick EMA
         self._srv_obs = 0            # ticks the EMA has been fed
         for node in self.nodes:
@@ -181,7 +217,10 @@ class ElasticClusterFrontend:
             if g is None:
                 g = self._fleets[eng.fleet_key] = FleetGroup(
                     eng.model, eng.params, max_batch=eng.max_batch,
-                    max_seq=eng.max_seq, cache_dtype=eng.cache_dtype)
+                    max_seq=eng.max_seq, cache_dtype=eng.cache_dtype,
+                    async_mode=self.async_tick,
+                    decode_block=self.decode_block,
+                    attn_backend=eng.attn_backend)
             g.add(eng)
         return eng
 
@@ -189,12 +228,15 @@ class ElasticClusterFrontend:
         g = eng._fleet
         if g is None:
             return
-        g.remove(eng, restore=restore)
+        g.remove(eng, restore=restore)  # flushes the group's pending futures
         if not g.members:
             # evict the empty group so its high-water-mark slab doesn't pin
             # device memory forever (a re-spawn re-allocates from zeros)
+            self._async_stash.extend(g.reconcile(force=True))
             self._retired_dispatches += g.dispatches
             self._retired_prefill_dispatches += g.prefill_dispatches
+            self._retired_syncs += g.syncs
+            self._retired_sync_wait += g.sync_wait
             self._fleets = {k: v for k, v in self._fleets.items()
                             if v is not g}
 
@@ -224,6 +266,32 @@ class ElasticClusterFrontend:
                    for n in self.nodes for e in n.live + n.draining)
         return self._retired_prefill_dispatches + live + \
             sum(g.prefill_dispatches for g in self._fleets.values())
+
+    def sync_count(self) -> int:
+        """Total blocking host syncs performed (group reconciles + eager
+        fetches), including retired engines and evicted groups — the async
+        tick's ``syncs`` currency, mirroring ``decode_dispatches``."""
+        live = sum(e.syncs for n in self.nodes for e in n.live + n.draining)
+        return self._retired_syncs + live + \
+            sum(g.syncs for g in self._fleets.values())
+
+    def sync_wait_s(self) -> float:
+        """Total wall seconds the host spent *blocked* on device results —
+        the device half of the tick-wall breakdown (host half = tick wall
+        minus this)."""
+        live = sum(e.sync_wait
+                   for n in self.nodes for e in n.live + n.draining)
+        return self._retired_sync_wait + live + \
+            sum(g.sync_wait for g in self._fleets.values())
+
+    def _reconcile_all(self) -> list:
+        """The per-tick reconcile point: flush every fleet group's pending
+        device futures (one blocking sync per group) and collect the newly
+        finished requests, plus any stashed by mid-tick churn flushes."""
+        out, self._async_stash = self._async_stash, []
+        for g in list(self._fleets.values()):
+            out.extend(g.reconcile())
+        return out
 
     @property
     def replicas(self) -> list:
@@ -322,6 +390,11 @@ class ElasticClusterFrontend:
         self._fail(node, node.live[replica_idx])
 
     def _fail(self, node: _Node, eng: ReplicaEngine):
+        if eng._fleet is not None:
+            # pending futures must commit BEFORE progress resets — a stale
+            # token applied after evacuate() would corrupt the re-queued
+            # request's stream
+            self._async_stash.extend(eng._fleet.reconcile(force=True))
         lost = eng.evacuate()
         # lost work re-queues at its original arrival position (it is
         # usually the oldest work on the node, so it retries first — but by
@@ -332,6 +405,8 @@ class ElasticClusterFrontend:
         node.credit.pop(id(eng), None)
         self._leave_fleet(eng, restore=False)   # row dropped, not unstacked
         self._retired_prefill_dispatches += eng.prefill_dispatches
+        self._retired_syncs += eng.syncs
+        self._retired_sync_wait += eng.sync_wait
         self.failed_replicas += 1
 
     def _inject_failures(self):
@@ -396,14 +471,19 @@ class ElasticClusterFrontend:
 
     def tick(self, arrival_rate: float = 0.0) -> dict:
         self.t += 1
+        prefill_before = self.prefill_dispatches()
+        syncs_before = self.sync_count()
+        wait_before = self.sync_wait_s()
+        # async reconcile point: commit the previous tick's in-flight device
+        # results (retires free their slots HERE, before admission planning,
+        # so admission timing matches the eager oracle exactly)
+        finished_now: list = self._reconcile_all()
         self._advance_provisioning()
         self._inject_failures()
         self._generate_arrivals(arrival_rate)
         self._reroute_stranded()
         self._route_pending()
-        finished_now: list = []
         self._tick_dispatches = 0
-        prefill_before = self.prefill_dispatches()
         stepping: list = []          # (engine, n_substeps) across ALL nodes
         for node in self.nodes:
             self._dispatch(node)
@@ -423,7 +503,17 @@ class ElasticClusterFrontend:
         # Engines are independent within a tick (node queues were dispatched
         # above), so round interleaving matches stepping them one by one.
         max_sub = max((n for _, n in stepping), default=0)
+        # a fused decode block may engage on single-round ticks whose
+        # admission phase dispatched nothing (the group checks that);
+        # unrouted work would mean admissions are imminent, so hold off
+        allow_block = (self.decode_block > 1 and max_sub == 1
+                       and not self.pending)
         for r in range(max_sub):
+            if r > 0 and self.async_tick:
+                # hetero sub-rounds: round r's admission may use slots the
+                # previous round's decode freed, so reconcile between rounds
+                # (homogeneous clusters run one round = one sync per tick)
+                finished_now.extend(self._reconcile_all())
             round_engines = [(e, n) for e, n in stepping if n > r]
             ids = {id(e) for e, _ in round_engines}
             for eng, n in round_engines:
@@ -435,7 +525,8 @@ class ElasticClusterFrontend:
                     finished_now.extend(g.admit_round(ids))
             for g in self._fleets.values():
                 before = g.dispatches
-                finished_now.extend(g.decode_round(ids))
+                finished_now.extend(g.decode_round(
+                    ids, allow_block=allow_block))
                 self._tick_dispatches += g.dispatches - before
             for eng, _ in round_engines:     # engines outside any fleet
                 if eng._fleet is None:
@@ -451,9 +542,20 @@ class ElasticClusterFrontend:
                     self._leave_fleet(eng, restore=False)
                     self._retired_prefill_dispatches += \
                         eng.prefill_dispatches
+                    self._retired_syncs += eng.syncs
+                    self._retired_sync_wait += eng.sync_wait
             self.replica_ticks += len(node.live)
         self._tick_prefill_dispatches = \
             self.prefill_dispatches() - prefill_before
+        self._tick_syncs = self.sync_count() - syncs_before
+        self._tick_sync_wait = self.sync_wait_s() - wait_before
+        # finishes force-flushed by mid-tick churn (drain retires, failure
+        # evacuations) land in stashes — collect them NOW so a drain loop
+        # that terminates on this tick doesn't strand them
+        for g in self._fleets.values():
+            finished_now.extend(g.take_stash())
+        finished_now.extend(self._async_stash)
+        self._async_stash = []
         self.finished.extend(finished_now)
         self._m = self._compute_metrics(finished_now, arrival_rate)
         return self._m
@@ -621,6 +723,8 @@ class ElasticClusterFrontend:
             "replica_ticks": int(sum(len(n.live) for n in self.nodes)),
             "decode_dispatches": int(self._tick_dispatches),
             "prefill_dispatches": int(self._tick_prefill_dispatches),
+            "syncs": int(self._tick_syncs),
+            "sync_wait_s": float(self._tick_sync_wait),
             "fleet_groups": int(sum(1 for g in self._fleets.values()
                                     if len(g))),
             "service_rate": self.service_rate,

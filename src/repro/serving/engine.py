@@ -88,6 +88,50 @@ codec quantizes whole prompts at prefill end, and a bf16 pool would round
 the carried chunk state that single-shot keeps unrounded), so ``chunk_len``
 is ignored there.
 
+**Async tick contract (overlapped serving).** In async mode (the elastic
+frontend's default) the fleet dispatch methods never block on the device:
+``decode_round``/``admit_round`` push their work onto the accelerator queue
+and record a ``_Pending`` entry — the small device outputs (next tokens,
+fused retire mask, stepped mask, prefill first-tokens) plus the host context
+captured at dispatch time (engines, slots, requests, clocks). The decode
+*operands* (``toks``/``pos``/``rem``/``eos``/``active``) are persistent
+device arrays living next to the slab and advanced inside the same jitted
+dispatch (``FleetGroup.ops``), so consecutive ticks chain on device without
+the host rebuilding or re-uploading operand arrays. All deferred host
+bookkeeping is applied at ONE reconcile point per tick
+(``FleetGroup.reconcile`` — a single ``jax.device_get`` over every pending
+record, counted by ``syncs``): the host work for tick *t* (queues, tiers,
+metrics, the control plane's forecast→balance→scale) therefore overlaps the
+device computing tick *t*'s decode. What is pending when:
+
+  * a request admitted at tick *t* is *reserved* in its slot immediately
+    (occupancy, ``load`` and tier accounting are live) but its first token,
+    TTFT stamp and possible finish-at-prefill apply at the reconcile that
+    opens tick *t+1*;
+  * decode tokens/retires dispatched at tick *t* commit at tick *t+1*'s
+    reconcile, stamped with tick *t*'s clock — token streams and finish
+    ticks are **bit-identical** to the eager oracle (``async_tick=False``),
+    only the host-side observation is one tick late;
+  * because retire/slot-free reconciles *before* admission planning, a slot
+    freed by tick *t*'s decode is admittable at tick *t+1* — exactly like
+    the eager path, so admission lags the device state by **at most one
+    tick** under a full slab (and by zero ticks relative to the oracle);
+  * membership churn (drain retire, failure, scale-up joins) force-flushes
+    pending futures first, so host mirrors are current before rows unstack.
+
+``decode_block=K`` fuses K decode micro-steps into one dispatch via
+``lax.scan`` (one ``(K, F, B)`` sync per block — K× fewer dispatches *and*
+syncs). A block only auto-engages on ticks with no admissions at all —
+fleet prefill/chunk dispatches (``pending``) and eager single admits
+(``_admitted``) both veto it — and no chunk cursors. Queued work behind a
+*full* slab does not block engagement; the trade is that any admission
+landing *inside* the fused window (a retire freeing a slot, or an arrival
+finding one) only starts decoding at the window's end — admission-to-
+first-decode may lag up to K-1 ticks (plain async K=1 keeps the <= 1-tick
+bound). One block counts as K ticks of decode (finish clocks inside the
+block are ``dispatch_clock + k``) and the reconcile is deferred until the
+block's ticks are spent.
+
 ``ClusterFrontend`` stitches several replicas together behind a balancer
 policy — the live counterpart of the fluid simulator. The node-structured
 elastic frontend that plugs into the unified control plane lives in
@@ -97,6 +141,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Optional
 
@@ -118,8 +163,10 @@ _BUCKET_FAMILIES = ("dense", "ssm", "hybrid")
 # for dense, carried ssm/conv state for ssm/hybrid). moe is excluded by
 # default for the same capacity reason as bucketing.
 _CHUNK_FAMILIES = ("dense", "ssm", "hybrid")
-# kernel variants whose compilations count as prefill retraces
-_PREFILL_VARIANTS = ("prefill", "fleet_prefill", "chunk", "fleet_chunk")
+# kernel variants whose compilations count as prefill retraces (the async
+# admission twins included — same shapes, different sync contract)
+_PREFILL_VARIANTS = ("prefill", "fleet_prefill", "chunk", "fleet_chunk",
+                     "afleet_prefill", "afleet_chunk")
 
 
 def pow2_bucket(n: int, lo: int = 1) -> int:
@@ -142,10 +189,25 @@ class _ServeKernels:
     dispatch with sampling and retire decisions fused on device (the masked
     variant leaves non-stepping rows' cache untouched, for heterogeneous
     replica speeds); ``fleet_prefill`` / ``fleet_chunk`` are the admission
-    twins writing prefill state straight into the fleet slab."""
+    twins writing prefill state straight into the fleet slab. The ``afleet*``
+    variants are the async twins: decode operands live on device and advance
+    inside the dispatch, so the host syncs nothing until the next reconcile
+    (``afleet_block`` fuses K micro-steps per dispatch via ``lax.scan``)."""
     __slots__ = ("prefill", "decode", "decode_hold", "fleet", "fleet_hold",
                  "fleet_masked", "fleet_masked_hold", "fleet_prefill",
-                 "chunk", "fleet_chunk", "trace_counts")
+                 "chunk", "fleet_chunk", "afleet", "afleet_hold",
+                 "afleet_masked", "afleet_masked_hold", "afleet_prefill",
+                 "afleet_chunk", "afleet_block", "_block_factory",
+                 "trace_counts")
+
+    def block_kernel(self, K: int):
+        """The K-micro-step fused decode kernel (jitted on demand, cached
+        per K)."""
+        fn = self.afleet_block.get(K)
+        if fn is None:
+            fn = self.afleet_block[K] = jax.jit(self._block_factory(K),
+                                                donate_argnums=(1, 2))
+        return fn
 
     @property
     def prefill_traces(self) -> int:
@@ -164,14 +226,51 @@ def _dtype_name(cache_dtype) -> str:
         np.dtype(cache_dtype).name
 
 
-def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
+def _timed_get(owner, arrays):
+    """Blocking fetch of device ``arrays``, accounted on ``owner``: bumps
+    ``owner.syncs`` and adds the blocked wall time to ``owner.sync_wait``
+    (the host-vs-device tick breakdown the serve bench reports)."""
+    t0 = time.perf_counter()
+    out = jax.device_get(arrays)
+    owner.sync_wait += time.perf_counter() - t0
+    owner.syncs += 1
+    return out
+
+
+def _init_ops(cap: int, batch: int) -> dict:
+    """Fresh device-resident decode operands for an async fleet slab:
+    per-slot next-token / cache-position / remaining-budget / eos-id /
+    active-mask arrays, (cap, batch) each. Inactive rows are never read
+    through (``active`` masks them), so zero init is fine."""
+    return {
+        "toks": jnp.zeros((cap, batch), jnp.int32),
+        "pos": jnp.zeros((cap, batch), jnp.int32),
+        "rem": jnp.ones((cap, batch), jnp.int32),
+        "eos": jnp.full((cap, batch), -1, jnp.int32),
+        "active": jnp.zeros((cap, batch), bool),
+    }
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A dispatched device result not yet synced: ``arrays`` are the small
+    device outputs to fetch at the next reconcile, ``meta`` the host
+    bookkeeping context captured at dispatch time (engines, slots, requests
+    and the dispatch-time clocks that stamp TTFT/finish)."""
+    kind: str       # "decode" | "block" | "prefill" | "chunk"
+    arrays: object
+    meta: list
+
+
+def get_serve_kernels(model: Model, max_seq: int, cache_dtype,
+                      attn_backend: str = "einsum") -> _ServeKernels:
     # The cache lives on the Model instance (not a module global) so compiled
     # executables are reclaimed with the model instead of pinned forever.
     cache = getattr(model, "_serve_kernels", None)
     if cache is None:
         cache = {}
         object.__setattr__(model, "_serve_kernels", cache)  # frozen dataclass
-    key = (max_seq, _dtype_name(cache_dtype))
+    key = (max_seq, _dtype_name(cache_dtype), attn_backend)
     k = cache.get(key)
     if k is not None:
         return k
@@ -187,9 +286,12 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
         return model.prefill(p, batch, cache_len=max_seq,
                              cache_dtype=cache_dtype)
 
+    def _decode(p, st, tok, pos):
+        return model.decode(p, st, tok, pos, attn_backend=attn_backend)
+
     def _decode_fn(p, st, tok, pos):
         _count("decode")
-        return model.decode(p, st, tok, pos)
+        return _decode(p, st, tok, pos)
 
     def _decode_hold_fn(p, st, tok, pos, hslots):
         """Standalone decode that leaves the ``hslots`` slots' state
@@ -200,7 +302,7 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
         drops)."""
         _count("decode_hold")
         held = jax.tree.map(lambda t: jnp.take(t, hslots, axis=1), st)
-        logits, new = model.decode(p, st, tok, pos)
+        logits, new = _decode(p, st, tok, pos)
         new = jax.tree.map(
             lambda t, h: t.at[:, hslots].set(h, mode="drop"), new, held)
         return logits, new
@@ -224,8 +326,7 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
             hrows, hslots = held
             kept = jax.tree.map(lambda s: s[hrows, :, hslots], slab)
         logits, new_slab = jax.vmap(
-            lambda c, t, q: model.decode(p, c, t, q))(slab, toks[..., None],
-                                                      pos)
+            lambda c, t, q: _decode(p, c, t, q))(slab, toks[..., None], pos)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         done = active & ((rem <= 1) | (nxt == eos)
                          | (pos + 1 >= max_seq - 1))
@@ -263,6 +364,114 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
         _count("fleet_masked_hold")
         return _fleet_core(p, slab, toks, pos, rem, eos, active, rows=rows,
                            held=(hrows, hslots))
+
+    # ------------------------------------------------------ async variants
+    def _afleet_core(p, slab, ops, rows=None, held=None):
+        """One async decode micro-step: the operands live on device (``ops``)
+        and advance inside the dispatch — the device twin of
+        ``ReplicaEngine.apply_decode``. Returns the small sync payload
+        (next token, fused retire mask, stepped mask) plus the advanced
+        slab and operands; nothing blocks on the host."""
+        nxt, done, slab = _fleet_core(p, slab, ops["toks"], ops["pos"],
+                                      ops["rem"], ops["eos"], ops["active"],
+                                      rows=rows, held=held)
+        stepped = ops["active"] if rows is None else \
+            ops["active"] & rows[:, None]
+        inc = stepped.astype(jnp.int32)
+        ops = {
+            "toks": jnp.where(stepped, nxt, ops["toks"]),
+            "pos": ops["pos"] + inc,
+            "rem": ops["rem"] - inc,
+            "eos": ops["eos"],
+            "active": ops["active"] & ~done,
+        }
+        return nxt, done, stepped, slab, ops
+
+    def _afleet_fn(p, slab, ops):
+        _count("afleet")
+        return _afleet_core(p, slab, ops)
+
+    def _afleet_hold_fn(p, slab, ops, hrows, hslots):
+        _count("afleet_hold")
+        return _afleet_core(p, slab, ops, held=(hrows, hslots))
+
+    def _afleet_masked_fn(p, slab, ops, rows):
+        _count("afleet_masked")
+        return _afleet_core(p, slab, ops, rows=rows)
+
+    def _afleet_masked_hold_fn(p, slab, ops, rows, hrows, hslots):
+        _count("afleet_masked_hold")
+        return _afleet_core(p, slab, ops, rows=rows, held=(hrows, hslots))
+
+    def _make_block_fn(K):
+        def _afleet_block_fn(p, slab, ops):
+            """K fused decode micro-steps in ONE dispatch: ``lax.scan`` over
+            the async core (the retire rule is already the device twin of
+            the host rule, so EOS/max-tokens/cache-full compose exactly —
+            a slot retired at micro-step k is inactive for k+1..K-1). Syncs
+            one (K, F, B) token/retire/stepped block."""
+            _count("afleet_block")
+
+            def micro(carry, _):
+                slab, ops = carry
+                nxt, done, stepped, slab, ops = _afleet_core(p, slab, ops)
+                return (slab, ops), (nxt, done, stepped)
+
+            (slab, ops), (nxt, done, stepped) = jax.lax.scan(
+                micro, (slab, ops), None, length=K)
+            return nxt, done, stepped, slab, ops
+        return _afleet_block_fn
+
+    def _ops_admit(ops, rows, slots, first, plen, rems, eoss):
+        """Device twin of ``commit_admit``: register admitted rows in the
+        persistent operands. A request that finishes at prefill time
+        (``rem < 1`` i.e. max_new_tokens <= 1, or first token == EOS) never
+        activates; the host learns the same outcome at reconcile."""
+        return {
+            "toks": ops["toks"].at[rows, slots].set(first, mode="drop"),
+            "pos": ops["pos"].at[rows, slots].set(plen, mode="drop"),
+            "rem": ops["rem"].at[rows, slots].set(rems, mode="drop"),
+            "eos": ops["eos"].at[rows, slots].set(eoss, mode="drop"),
+            "active": ops["active"].at[rows, slots].set(
+                (rems >= 1) & (first != eoss), mode="drop"),
+        }
+
+    def _afleet_prefill_fn(p, slab, ops, toks, lens, rows, slots, rems,
+                           eoss):
+        """Async twin of ``_fleet_prefill_fn``: same slab scatter, plus the
+        admitted rows activate in the device operands so the same tick's
+        decode dispatch consumes their first token without a host sync."""
+        _count("afleet_prefill")
+        logits, small, plen = model.prefill(
+            p, {"tokens": toks, "lengths": lens}, cache_len=max_seq,
+            cache_dtype=cache_dtype)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def scatter(s, sm):
+            return s.at[rows, :, slots].set(
+                sm.swapaxes(0, 1).astype(s.dtype), mode="drop")
+
+        slab = jax.tree.map(scatter, slab, small)
+        ops = _ops_admit(ops, rows, slots, first, plen.astype(jnp.int32),
+                         rems, eoss)
+        return first, slab, ops
+
+    def _afleet_chunk_fn(p, slab, ops, toks, offs, lens, fresh, rows, slots,
+                         final, rems, eoss):
+        """Async twin of ``_fleet_chunk_fn``: rows finishing their last
+        chunk activate in the device operands (non-final rows' operand
+        writes are parked out of bounds and drop)."""
+        _count("afleet_chunk")
+        sub = jax.tree.map(lambda s: s[rows, :, slots].swapaxes(0, 1), slab)
+        first, pos, new_sub = _chunk_core(sub, toks, offs, lens, fresh, p)
+        slab = jax.tree.map(
+            lambda s, ns: s.at[rows, :, slots].set(
+                ns.swapaxes(0, 1).astype(s.dtype), mode="drop"),
+            slab, new_sub)
+        wrows = jnp.where(final, rows, ops["toks"].shape[0])
+        ops = _ops_admit(ops, wrows, slots, first, pos.astype(jnp.int32),
+                         rems, eoss)
+        return first, slab, ops
 
     def _fleet_prefill_fn(p, slab, toks, lens, rows, slots):
         """ONE admission dispatch for every same-bucket-length admit across
@@ -344,6 +553,17 @@ def get_serve_kernels(model: Model, max_seq: int, cache_dtype) -> _ServeKernels:
     k.fleet_prefill = jax.jit(_fleet_prefill_fn, donate_argnums=(1,))
     k.chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
     k.fleet_chunk = jax.jit(_fleet_chunk_fn, donate_argnums=(1,))
+    # async variants: slab AND operands are donated (both exclusively owned
+    # by the FleetGroup), so consecutive ticks chain in place on device
+    k.afleet = jax.jit(_afleet_fn, donate_argnums=(1, 2))
+    k.afleet_hold = jax.jit(_afleet_hold_fn, donate_argnums=(1, 2))
+    k.afleet_masked = jax.jit(_afleet_masked_fn, donate_argnums=(1, 2))
+    k.afleet_masked_hold = jax.jit(_afleet_masked_hold_fn,
+                                   donate_argnums=(1, 2))
+    k.afleet_prefill = jax.jit(_afleet_prefill_fn, donate_argnums=(1, 2))
+    k.afleet_chunk = jax.jit(_afleet_chunk_fn, donate_argnums=(1, 2))
+    k.afleet_block = {}
+    k._block_factory = _make_block_fn
     cache[key] = k
     return k
 
@@ -487,21 +707,39 @@ class FleetGroup:
     bucketed admit rows of the same pow2 length bucket flatten into ONE
     ``fleet_prefill`` per distinct bucket, and all due chunk rows into ONE
     ``fleet_chunk`` — each writing KV/state straight into the donated slab.
-    ``prefill_dispatches`` mirrors ``dispatches``."""
+    ``prefill_dispatches`` mirrors ``dispatches``.
+
+    With ``async_mode`` the dispatch methods never block: device results
+    queue on ``pending`` and the deferred host bookkeeping applies at the
+    next ``reconcile()`` — one blocking sync per tick (``syncs``), with the
+    decode operands persistent on device (``ops``). See the module
+    docstring's async tick contract."""
 
     def __init__(self, model: Model, params, *, max_batch: int, max_seq: int,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, async_mode: bool = False,
+                 decode_block: int = 1, attn_backend: str = "einsum"):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        self.attn_backend = attn_backend
         self.members: list = []     # ReplicaEngine; fleet row == list index
         self.cap = 0                # allocated fleet rows (power of two)
         self.slab = None            # cache pytree, leaves (cap, *per_replica)
         self.dispatches = 0         # jitted fleet decode dispatches issued
         self.prefill_dispatches = 0  # jitted fleet admission dispatches
-        self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
+        self.async_mode = bool(async_mode)
+        self.decode_block = max(1, int(decode_block))
+        self.ops = None             # device decode operands (async mode)
+        self.pending: list = []     # _Pending device results, un-synced
+        self._stash: list = []      # finishes from forced flushes (churn)
+        self._admitted = False      # eager single-admit landed this tick
+        self.syncs = 0              # blocking host syncs performed
+        self.sync_wait = 0.0        # seconds spent blocked on device results
+        self._block_credit = 0      # ticks already covered by a decode block
+        self._kernels = get_serve_kernels(model, max_seq, cache_dtype,
+                                          attn_backend)
 
     def __len__(self) -> int:
         return len(self.members)
@@ -509,8 +747,11 @@ class FleetGroup:
     # -------------------------------------------------------------- members
     def add(self, eng: "ReplicaEngine"):
         """Stack ``eng``'s device cache into the slab (any in-flight slot
-        state rides along, so replicas can join mid-generation)."""
+        state rides along, so replicas can join mid-generation). Pending
+        futures flush first so the operand seed sees current host state."""
         assert eng._fleet is None, "engine already belongs to a fleet"
+        if self.pending:
+            self._stash += self.reconcile(force=True)
         row = len(self.members)
         if row >= self.cap:
             new_cap = pow2_bucket(row + 1)
@@ -518,41 +759,88 @@ class FleetGroup:
                 self.slab = jax.tree.map(
                     lambda c: jnp.zeros((new_cap,) + c.shape, c.dtype),
                     eng.cache)
+                if self.async_mode:
+                    self.ops = _init_ops(new_cap, self.max_batch)
             else:
-                self.slab = jax.tree.map(
-                    lambda s: jnp.concatenate(
-                        [s, jnp.zeros((new_cap - self.cap,) + s.shape[1:],
-                                      s.dtype)]), self.slab)
+                grow = lambda s: jnp.concatenate(
+                    [s, jnp.zeros((new_cap - self.cap,) + s.shape[1:],
+                                  s.dtype)])
+                self.slab = jax.tree.map(grow, self.slab)
+                if self.async_mode:
+                    self.ops = jax.tree.map(grow, self.ops)
             self.cap = new_cap
         self.slab = jax.tree.map(lambda s, c: s.at[row].set(c),
                                  self.slab, eng.cache)
+        if self.async_mode:
+            self._seed_ops_row(row, eng)
         eng.cache = None
         eng._fleet, eng._fleet_row = self, row
         self.members.append(eng)
 
+    def _seed_ops_row(self, row: int, eng: "ReplicaEngine"):
+        """Initialize the device operands for a joining member from its
+        host mirrors (it may carry in-flight slots mid-generation)."""
+        B = self.max_batch
+        rem = np.zeros(B, np.int32)
+        eos = np.full(B, -1, np.int32)
+        act = np.zeros(B, bool)
+        for s, req in enumerate(eng.slots):
+            if req is not None and s not in eng._chunks:
+                act[s] = True
+                rem[s] = req.max_new_tokens - len(req.output)
+                eos[s] = req.eos_id
+        vals = {"toks": np.asarray(eng.last_tok, np.int32),
+                "pos": np.asarray(eng.pos, np.int32),
+                "rem": rem, "eos": eos, "active": act}
+        self.ops = {kk: self.ops[kk].at[row].set(vals[kk])
+                    for kk in self.ops}
+
     def remove(self, eng: "ReplicaEngine", restore: bool = True):
         """Detach ``eng``; with ``restore`` its cache row is unstacked back
-        onto the engine (drain hand-back), otherwise dropped (failure)."""
+        onto the engine (drain hand-back), otherwise dropped (failure).
+        Pending futures flush first (host mirrors must be current before a
+        row unstacks or backfills — the churn half of the async contract)."""
+        if self.pending:
+            self._stash += self.reconcile(force=True)
         row = eng._fleet_row
         assert eng._fleet is self and self.members[row] is eng
         if restore:
             eng.cache = jax.tree.map(lambda s: s[row], self.slab)
         last = self.members.pop()
         if last is not eng:          # backfill the hole with the last row
-            self.slab = jax.tree.map(
-                lambda s: s.at[row].set(s[len(self.members)]), self.slab)
+            backfill = lambda s: s.at[row].set(s[len(self.members)])
+            self.slab = jax.tree.map(backfill, self.slab)
+            if self.async_mode:
+                self.ops = jax.tree.map(backfill, self.ops)
             last._fleet_row = row
             self.members[row] = last
         eng._fleet, eng._fleet_row = None, -1
 
     # -------------------------------------------------------------- slots
-    def write_slot(self, f: int, slot: int, small_state, row: int):
+    def write_slot(self, f: int, slot: int, small_state, row: int,
+                   req: Optional["Request"] = None, prompt_len: int = 0):
         """Copy prefill output row ``row`` into member ``f``'s slot (the
         exact-length single-admit path; bucketed admits scatter on device
-        inside ``fleet_prefill`` instead)."""
+        inside ``fleet_prefill`` instead). In async mode the slot also
+        registers in the device operands (``req``'s first token was already
+        synced by the eager single-admit path)."""
         self.slab = jax.tree.map(
             lambda s, sm: s.at[f, :, slot].set(sm[:, row]),
             self.slab, small_state)
+        if self.async_mode and req is not None:
+            o = self.ops
+            self.ops = {
+                "toks": o["toks"].at[f, slot].set(int(req.output[-1])),
+                "pos": o["pos"].at[f, slot].set(int(prompt_len)),
+                "rem": o["rem"].at[f, slot].set(
+                    req.max_new_tokens - len(req.output)),
+                "eos": o["eos"].at[f, slot].set(int(req.eos_id)),
+                "active": o["active"].at[f, slot].set(True),
+            }
+            # single admits bypass ``pending`` (their sync was eager), so
+            # they must veto fused-block engagement separately — a tick
+            # that admitted anything never fuses
+            self._admitted = True
 
     # -------------------------------------------------------------- admit
     def admit_round(self, stepping_ids=None) -> list:
@@ -595,15 +883,31 @@ class FleetGroup:
         lens = np.ones(K, np.int32)             # pad rows: length-1 dummies
         rows = np.full(K, self.cap, np.int32)   # OOB pad rows -> dropped
         slots = np.full(K, self.max_batch, np.int32)
+        rems = np.zeros(K, np.int32)
+        eoss = np.full(K, -1, np.int32)
         for i, (e, slot, req, p) in enumerate(entries):
             toks[i, :len(p)] = p
             lens[i] = len(p)
             rows[i], slots[i] = e._fleet_row, slot
+            rems[i] = req.max_new_tokens - 1
+            eoss[i] = req.eos_id
+        if self.async_mode:
+            first, self.slab, self.ops = self._kernels.afleet_prefill(
+                self.params, self.slab, self.ops, jnp.asarray(toks),
+                jnp.asarray(lens), jnp.asarray(rows), jnp.asarray(slots),
+                jnp.asarray(rems), jnp.asarray(eoss))
+            self.prefill_dispatches += 1
+            meta = []
+            for i, (e, slot, req, p) in enumerate(entries):
+                e.slots[slot] = req      # reserve now; commit at reconcile
+                meta.append((i, e, slot, req, len(p), e.clock))
+            self.pending.append(_Pending("prefill", first, meta))
+            return
         first, plen, self.slab = self._kernels.fleet_prefill(
             self.params, self.slab, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(rows), jnp.asarray(slots))
         self.prefill_dispatches += 1
-        first, plen = jax.device_get((first, plen))
+        first, plen = _timed_get(self, (first, plen))
         first, plen = np.asarray(first), np.asarray(plen)
         for i, (e, slot, req, p) in enumerate(entries):
             e.commit_admit([slot], [req], first[i:i + 1], plen[i:i + 1],
@@ -622,23 +926,56 @@ class FleetGroup:
             slots = np.full(K, self.max_batch, np.int32)
             for i, (e, slot, *_rest) in enumerate(items):
                 rows[i], slots[i] = e._fleet_row, slot
+            if self.async_mode:
+                final = np.zeros(K, bool)
+                rems = np.zeros(K, np.int32)
+                eoss = np.full(K, -1, np.int32)
+                for i, (e, slot, t, off, ln, fr, fin) in enumerate(items):
+                    req = e._chunks[slot].req
+                    final[i] = fin
+                    rems[i] = req.max_new_tokens - 1
+                    eoss[i] = req.eos_id
+                first, self.slab, self.ops = self._kernels.afleet_chunk(
+                    self.params, self.slab, self.ops, jnp.asarray(toks),
+                    jnp.asarray(offs), jnp.asarray(lens), jnp.asarray(fresh),
+                    jnp.asarray(rows), jnp.asarray(slots),
+                    jnp.asarray(final), jnp.asarray(rems), jnp.asarray(eoss))
+                self.prefill_dispatches += 1
+                meta = []
+                for i, (e, slot, t, off, ln, fr, fin) in enumerate(items):
+                    cur = e._chunks[slot]
+                    if not fin:          # cursor advance is host-computable
+                        cur.consumed += e.chunk_len
+                        continue
+                    del e._chunks[slot]  # slot stays reserved (slots[slot])
+                    meta.append((i, e, slot, cur.req, off + ln, e.clock))
+                if meta:
+                    self.pending.append(_Pending("chunk", first, meta))
+                continue
             first, pos, self.slab = self._kernels.fleet_chunk(
                 self.params, self.slab, jnp.asarray(toks), jnp.asarray(offs),
                 jnp.asarray(lens), jnp.asarray(fresh), jnp.asarray(rows),
                 jnp.asarray(slots))
             self.prefill_dispatches += 1
-            first, pos = jax.device_get((first, pos))
+            first, pos = _timed_get(self, (first, pos))
             first, pos = np.asarray(first), np.asarray(pos)
             for i, (e, slot, t, off, ln, fr, fin) in enumerate(items):
                 e.commit_chunk(slot, first[i], pos[i], fin, finished)
 
     # -------------------------------------------------------------- decode
-    def decode_round(self, stepping_ids=None) -> list:
+    def decode_round(self, stepping_ids=None, allow_block: bool = False
+                     ) -> list:
         """One fused decode step for every member (or the ``id(engine)``
-        subset in ``stepping_ids``). Returns finished requests. The whole
-        round costs one jitted dispatch and one small (F, B) host sync."""
+        subset in ``stepping_ids``). Returns finished requests. Eager: one
+        jitted dispatch plus one small (F, B) host sync. Async: one jitted
+        dispatch, NO sync (results commit at the next ``reconcile``), and
+        with ``allow_block`` a K-micro-step fused block may engage on a
+        tick that admitted nothing — covering the next K-1 ticks' decode
+        in this single dispatch."""
         movers = [e for e in self.members
                   if stepping_ids is None or id(e) in stepping_ids]
+        if self.async_mode:
+            return self._decode_round_async(movers, allow_block)
         if not movers or not any(e.n_decoding for e in movers):
             return []
         cap, B = self.cap, self.max_batch
@@ -682,13 +1019,145 @@ class FleetGroup:
             nxt, done, self.slab = self._kernels.fleet_masked(
                 self.params, self.slab, toks, pos, rem, eos, active, rows)
         self.dispatches += 1
-        nxt, done = jax.device_get((nxt, done))   # ONE small host sync
+        nxt, done = _timed_get(self, (nxt, done))   # ONE small host sync
         nxt, done = np.asarray(nxt), np.asarray(done)
         finished: list = []
         for e in movers:
             f = e._fleet_row
             finished.extend(e.commit_decode(nxt[f], done[f]))
         return finished
+
+    def _decode_round_async(self, movers: list, allow_block: bool) -> list:
+        """Sync-free decode round: operands already live on device, so the
+        dispatch takes only the cheap host-known masks (held chunk slots,
+        stepping rows). Results queue on ``pending``."""
+        if self._block_credit > 0:      # a fused block covers this tick
+            self._block_credit -= 1
+            return []
+        if not movers or not any(e.n_decoding for e in movers):
+            return []
+        cap, B = self.cap, self.max_batch
+        held = [(e._fleet_row, s) for e in movers for s in e._chunks]
+        full = len(movers) == len(self.members)
+        K = self.decode_block
+        meta = [(e, e._fleet_row, e.clock) for e in movers]
+        # fused-block engagement: only on ticks with no admissions at all —
+        # ``pending`` catches this tick's fleet prefill/chunk dispatches
+        # (the tick-start reconcile cleared the previous window) and
+        # ``_admitted`` the eager single-admit path — and no chunk cursors
+        # anywhere. Queued work behind a FULL slab does not block
+        # engagement: any admission landing inside the fused window (a
+        # retire freeing a slot, or an arrival finding one) only starts
+        # decoding at the window's end, i.e. admission-to-first-decode may
+        # lag up to K-1 ticks (the documented decode_block trade; async
+        # with K=1 keeps the <= 1-tick bound)
+        admitted, self._admitted = self._admitted, False
+        if (allow_block and K > 1 and full and not held and not self.pending
+                and not admitted
+                and all(not e._chunks for e in self.members)):
+            nxt, done, stepped, self.slab, self.ops = \
+                self._kernels.block_kernel(K)(self.params, self.slab,
+                                              self.ops)
+            self.dispatches += 1
+            self._block_credit = K - 1
+            self.pending.append(_Pending("block", (nxt, done, stepped),
+                                         meta))
+            return []
+        if held:                     # pow2-padded OOB -> dropped on scatter
+            hk = pow2_bucket(len(held))
+            hrows = np.full(hk, cap, np.int32)
+            hslots = np.full(hk, B, np.int32)
+            for i, (f, s) in enumerate(held):
+                hrows[i], hslots[i] = f, s
+        if full:
+            if held:
+                out = self._kernels.afleet_hold(self.params, self.slab,
+                                                self.ops, hrows, hslots)
+            else:
+                out = self._kernels.afleet(self.params, self.slab, self.ops)
+        else:
+            rows = np.zeros((cap,), bool)
+            for e in movers:
+                rows[e._fleet_row] = True
+            if held:
+                out = self._kernels.afleet_masked_hold(
+                    self.params, self.slab, self.ops, rows, hrows, hslots)
+            else:
+                out = self._kernels.afleet_masked(self.params, self.slab,
+                                                  self.ops, rows)
+        nxt, done, stepped, self.slab, self.ops = out
+        self.dispatches += 1
+        self.pending.append(_Pending("decode", (nxt, done, stepped), meta))
+        return []
+
+    # ----------------------------------------------------------- reconcile
+    def take_stash(self) -> list:
+        """Drain finishes produced by forced mid-tick flushes (membership
+        churn) without touching still-pending futures."""
+        out = list(self._stash)
+        self._stash.clear()
+        return out
+
+    def reconcile(self, force: bool = False) -> list:
+        """The ONE blocking host sync per tick: fetch every pending device
+        result together and apply the deferred host bookkeeping in dispatch
+        order (prefill first-tokens before the same tick's decode tokens —
+        the exact replay of the eager host effects, one tick late). Returns
+        newly finished requests, stamped with their dispatch-time clocks.
+        While a decode block still covers upcoming ticks the fetch is
+        deferred (that is the < 1 sync/tick regime) unless ``force``d by
+        membership churn."""
+        # mutate the stash in place: callers flush via
+        # ``self._stash += self.reconcile(...)`` and a reassignment here
+        # would strand their appends on the orphaned old list (the bound
+        # method/in-place target resolves BEFORE this call runs)
+        finished: list = list(self._stash)
+        self._stash.clear()
+        if not self.pending or (self._block_credit > 0 and not force):
+            return finished
+        pend, self.pending = self.pending, []
+        fetched = _timed_get(self, [p.arrays for p in pend])
+        for p, vals in zip(pend, fetched):
+            if p.kind == "decode":
+                self._apply_decode(vals, p.meta, finished)
+            elif p.kind == "block":
+                self._apply_block(vals, p.meta, finished)
+            else:                    # "prefill" and final-"chunk" commits
+                self._apply_admit(vals, p.meta, finished)
+        return finished
+
+    def _apply_decode(self, arrays, meta: list, finished: list):
+        nxt, done, stepped = (np.asarray(a) for a in arrays)
+        for e, row, clock in meta:
+            finished.extend(e.apply_decode(nxt[row], done[row], stepped[row],
+                                           clock))
+
+    def _apply_block(self, arrays, meta: list, finished: list):
+        nxt, done, stepped = (np.asarray(a) for a in arrays)  # (K, F, B)
+        for k in range(nxt.shape[0]):        # micro-step k == tick clock+k
+            for e, row, clock in meta:
+                finished.extend(e.apply_decode(nxt[k, row], done[k, row],
+                                               stepped[k, row], clock + k))
+
+    def _apply_admit(self, first, meta: list, finished: list):
+        """Deferred ``commit_admit``/final-chunk ``commit_chunk``: the slot
+        was reserved at dispatch (and non-final chunk cursor advances were
+        committed host-side there); now the first generated token, the TTFT
+        stamp and the finish-at-prefill rule apply. ``pos`` in the meta is
+        the host-computed cache frontier (prompt length, or chunk offset +
+        length)."""
+        first = np.asarray(first)
+        for i, e, slot, req, pos, clock in meta:
+            tok = int(first[i])
+            req.output.append(tok)
+            req.first_token_time = clock
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+                req.finish_time = clock
+                finished.append(req)
+                e.slots[slot] = None
+                continue
+            e.pos[slot] = pos
+            e.last_tok[slot] = tok
 
 
 def total_prefill_traces(engines) -> int:
@@ -736,12 +1205,22 @@ class ReplicaEngine:
                  max_seq: int = 256, cache_dtype=jnp.float32, rid: int = 0,
                  speed: float = 1.0, min_bucket: int = 8,
                  bucket_prompts: Optional[bool] = None, chunk_len: int = 0,
-                 tiers: Optional[TierSet] = None):
+                 tiers: Optional[TierSet] = None,
+                 attn_backend: str = "einsum"):
+        if attn_backend not in ("einsum", "pallas"):
+            raise ValueError(f"unknown attn_backend {attn_backend!r}")
+        if attn_backend == "pallas" and \
+                model.cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                "attn_backend='pallas' needs the attention-KV decode path; "
+                f"family={model.cfg.family!r} decodes through ssm/encdec "
+                "state")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        self.attn_backend = attn_backend
         self.rid = rid
         self.speed = speed            # relative decode speed (hetero hardware)
         self.min_bucket = min_bucket
@@ -754,6 +1233,8 @@ class ReplicaEngine:
         self.queue: TieredQueue = TieredQueue(self.tiers)
         self.clock = 0.0
         self.steps = 0
+        self.syncs = 0                # blocking host syncs performed
+        self.sync_wait = 0.0          # seconds spent blocked on the device
         self.prefill_dispatches = 0   # jitted admission dispatches issued
         self._fleet: Optional[FleetGroup] = None   # device state owner when
         self._fleet_row = -1                       # fleet-batched
@@ -771,7 +1252,8 @@ class ReplicaEngine:
                           or _dtype_name(cache_dtype) != "float32"):
             chunk_len = 0
         self.chunk_len = int(chunk_len)
-        self._kernels = get_serve_kernels(model, max_seq, cache_dtype)
+        self._kernels = get_serve_kernels(model, max_seq, cache_dtype,
+                                          attn_backend)
         self._prefill = self._kernels.prefill
         self._decode = self._kernels.decode
 
@@ -779,7 +1261,8 @@ class ReplicaEngine:
     def fleet_key(self) -> tuple:
         """Replicas with equal keys can share one stacked fleet slab."""
         return (id(self.model), id(self.params), self.max_batch,
-                self.max_seq, _dtype_name(self.cache_dtype))
+                self.max_seq, _dtype_name(self.cache_dtype),
+                self.attn_backend)
 
     @property
     def prefill_traces(self) -> int:
@@ -830,7 +1313,8 @@ class ReplicaEngine:
     def _insert_slot(self, slot: int, small_state, row: int, prompt_len: int,
                      first_tok: int, req: Request):
         if self._fleet is not None:
-            self._fleet.write_slot(self._fleet_row, slot, small_state, row)
+            self._fleet.write_slot(self._fleet_row, slot, small_state, row,
+                                   req=req, prompt_len=prompt_len)
         else:
             def put(big, small):
                 return big.at[:, slot].set(small[:, row])
@@ -857,7 +1341,6 @@ class ReplicaEngine:
             batch = {"tokens": jnp.asarray(toks),
                      "lengths": jnp.asarray(lengths)}
             logits, small, plen = self._prefill(self.params, batch)
-            plen = np.asarray(plen)
         else:
             req = reqs[0]
             # same overflow guard as the bucketed path: the KV pool holds
@@ -868,9 +1351,10 @@ class ReplicaEngine:
             if extras:
                 batch.update({k: jnp.asarray(v) for k, v in extras.items()})
             logits, small, plen = self._prefill(self.params, batch)
-            plen = np.full(1, int(plen), np.int32)
         self.prefill_dispatches += 1
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        first, plen = _timed_get(self, (jnp.argmax(logits, axis=-1), plen))
+        first = np.asarray(first)
+        plen = np.atleast_1d(np.asarray(plen)).astype(np.int32)
         for i, (slot, req) in enumerate(zip(slots, reqs)):
             tok = int(first[i])
             req.output.append(tok)
@@ -1043,7 +1527,7 @@ class ReplicaEngine:
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(offs),
             jnp.asarray(lens), jnp.asarray(fresh), jnp.asarray(slots))
         self.prefill_dispatches += 1
-        first, pos = jax.device_get((first, pos))
+        first, pos = _timed_get(self, (first, pos))
         first, pos = np.asarray(first), np.asarray(pos)
         for i, (slot, t, off, ln, fr, fin) in enumerate(rows):
             self.commit_chunk(slot, first[i], pos[i], fin, finished)
@@ -1083,7 +1567,7 @@ class ReplicaEngine:
                                               pos)
         self.steps += 1
         finished: list = []
-        next_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        next_toks = np.asarray(_timed_get(self, jnp.argmax(logits, axis=-1)))
         for slot, req in enumerate(self.slots):
             if req is None or slot in self._chunks:
                 continue
@@ -1119,6 +1603,29 @@ class ReplicaEngine:
                 self.slots[slot] = None
         if stepped:
             self.steps += 1
+        return finished
+
+    def apply_decode(self, nxt: np.ndarray, done: np.ndarray,
+                     stepped: np.ndarray, clock: float) -> list:
+        """Apply one *async* fleet decode result at reconcile time: the
+        device's ``stepped`` mask (not the possibly-stale host view) says
+        which slots advanced, and ``clock`` is the dispatch-time clock that
+        stamps finishes. Host mirrors update vectorized (numpy
+        struct-of-arrays), python touches only the stepped slots."""
+        idx = np.flatnonzero(stepped)
+        if idx.size == 0:
+            return []
+        self.pos[idx] += 1
+        self.last_tok[idx] = nxt[idx]
+        self.steps += 1
+        finished: list = []
+        for s in idx:
+            req = self.slots[s]
+            req.output.append(int(nxt[s]))
+            if done[s]:
+                req.finish_time = clock
+                finished.append(req)
+                self.slots[s] = None
         return finished
 
     def step(self, dt: float = 1.0) -> list:
@@ -1176,7 +1683,8 @@ class ClusterFrontend:
                 if g is None:
                     g = self.fleets[eng.fleet_key] = FleetGroup(
                         eng.model, eng.params, max_batch=eng.max_batch,
-                        max_seq=eng.max_seq, cache_dtype=eng.cache_dtype)
+                        max_seq=eng.max_seq, cache_dtype=eng.cache_dtype,
+                        attn_backend=eng.attn_backend)
                 g.add(eng)
 
     def submit(self, req: Request):

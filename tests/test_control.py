@@ -237,12 +237,17 @@ def _run_elastic(m, params, cfg, arrivals, scaler, tiers=None):
             req.tier = tiers.names[rid % len(tiers)]
         return req
 
+    # eager (synchronous) ticks: the fluid sim observes its own tick
+    # synchronously, so the apples-to-apples ranking comparison runs the
+    # engine's eager oracle too — the async tick intentionally delays
+    # metric observation by one tick, which shifts WHICH node the scaler
+    # grows first (legit controller divergence, not a serving difference)
     fe = ElasticClusterFrontend(
         _factory(m, params, max_batch=2), cfg.num_nodes, initial_replicas=1,
         provisioning_delay=cfg.provisioning_delay,
         max_replicas_per_node=cfg.max_replicas_per_node,
         request_factory=request_factory, seed=0, est_tokens=N_NEW,
-        tiers=tiers)
+        async_tick=False, tiers=tiers)
     plane = ControlPlane(cfg, fe, balancer="rr", scaler=scaler,
                          unit_capacity=2.0 / N_NEW, seed=0,
                          init_arrival=float(arrivals[:5].mean()))

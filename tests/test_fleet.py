@@ -84,7 +84,9 @@ def test_fleet_matches_per_replica_across_churn(arch):
 
 def test_one_dispatch_per_group_per_tick(setup):
     """4 same-model replicas across 2 nodes = ONE fleet group = ONE jitted
-    decode dispatch per tick."""
+    decode dispatch per tick — and, under the async tick (default), at most
+    ONE blocking host sync per tick (the reconcile of the previous tick's
+    futures), even on ticks that also admit."""
     c, m, params = setup
 
     def factory(rid):
@@ -93,12 +95,24 @@ def test_one_dispatch_per_group_per_tick(setup):
     fe = ElasticClusterFrontend(factory, 2, initial_replicas=2, seed=0)
     for r in _make_reqs(16, n_new=8):
         fe.submit(r)
-    fe.tick(0.0)                         # admit everywhere
+    mtr = fe.tick(0.0)                   # admit everywhere
+    assert mtr["syncs"] <= 1             # admissions defer their sync too
     for _ in range(3):                   # saturated steady-state ticks
         mtr = fe.tick(0.0)
         assert mtr["fleet_groups"] == 1
         assert mtr["decode_dispatches"] == 1
+        assert mtr["syncs"] == 1         # exactly the one reconcile
     assert len(fe.replicas) == 4
+    # the eager oracle pays >= 1 sync per decode round PLUS admission
+    # syncs: its total must exceed the async run's for the same workload
+    fe_e = ElasticClusterFrontend(factory, 2, initial_replicas=2, seed=0,
+                                  async_tick=False)
+    for r in _make_reqs(16, n_new=8):
+        fe_e.submit(r)
+    for _ in range(4):
+        mtr_e = fe_e.tick(0.0)
+        assert mtr_e["syncs"] >= 1
+    assert fe_e.sync_count() > fe.sync_count()
 
 
 def test_fleet_join_and_leave_mid_generation(setup):
