@@ -27,6 +27,16 @@ Phases over real CPU forwards:
     host-vs-device tick-wall split (``sync_wait`` fraction). At the largest
     size a ``decode_block=4`` arm fuses 4 micro-steps per dispatch —
     dispatches AND syncs drop to 1/4 per tick;
+  * **shard scaling** — saturated decode `steps_per_s` vs device count
+    (1/2/4/8 virtual CPU devices) with the fleet slab sharded over an
+    N-way ``('fleet',)`` mesh, at fixed total fleet F=8 (strong scaling)
+    and fixed per-device fleet F=2N (weak scaling). Each point runs in a
+    subprocess because ``xla_force_host_platform_device_count`` is read
+    once at jax backend init; the steady-state compile-excluded per-tick
+    method matches the tick-scaling phase. NB: virtual devices time-slice
+    the host's real cores — on a single-core box the curve measures
+    sharding *overhead*, not speedup; the near-linear regime needs
+    >= N real cores (or real accelerators);
   * **control-plane run** — the original ControlPlane-driven trace for
     TTFT/latency percentiles and the prefill retrace bound, plus the int8
     KV-cache capacity gain (``cache_dtype="int8"``).
@@ -518,6 +528,134 @@ def bench_tick_scaling(model, params, cfg) -> dict:
     return out
 
 
+SHARD_DEVICES = (1, 2, 4, 8)
+SHARD_FLEET = 8              # strong-scaling total fleet size
+SHARD_WEAK_PER_DEV = 2       # weak scaling: F = 2 * devices
+
+_SHARD_WORKER = r"""
+import os, sys
+n, F = int(sys.argv[1]), int(sys.argv[2])
+if n > 1:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d" % n
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import make_fleet_mesh
+from repro.models import make_model
+from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+MAX_BATCH, MAX_SEQ = 4, 64
+cfg = get_config("granite-3-8b").reduced()
+model = make_model(cfg, tp=1)
+params = model.init(jax.random.PRNGKey(0), jnp.float32)
+mesh = make_fleet_mesh(n) if n > 1 else None
+
+def mk(rid):
+    return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                         max_seq=MAX_SEQ, rid=rid)
+
+fe = ElasticClusterFrontend(mk, 1, initial_replicas=F,
+                            max_replicas_per_node=F, seed=0,
+                            est_tokens=6, mesh=mesh)
+rng = np.random.default_rng(1)
+rid = 0
+
+def refill():
+    global rid
+    while (len(fe.pending) + sum(nd.unfinished() for nd in fe.nodes)
+           < 2 * F * MAX_BATCH):
+        plen = int(rng.integers(2, 14))
+        fe.submit(Request(rid,
+                          rng.integers(1, cfg.vocab_size, plen).tolist(),
+                          max_new_tokens=48))
+        rid += 1
+
+for _ in range(8):                       # warm compiles + fill the slab
+    refill()
+    fe.tick(0.0)
+walls = []
+s0, d0, ticks = fe.sync_count(), fe.decode_dispatches(), 0
+for _ in range(6):                       # 6 rounds x 6-tick chunks
+    refill()
+    for _ in range(6):
+        tr0 = fe.serve_kernel_traces()
+        t0 = time.perf_counter()
+        fe.tick(0.0)
+        walls.append((time.perf_counter() - t0,
+                      fe.serve_kernel_traces() > tr0))
+        ticks += 1
+kept = [w for w, compiled in walls if not compiled]
+print("WORKER " + json.dumps({
+    "devices": n, "fleet": F, "n_dev_seen": jax.local_device_count(),
+    "steps_per_s": round(len(kept) / max(sum(kept), 1e-9), 2),
+    "syncs_per_tick": round((fe.sync_count() - s0) / ticks, 3),
+    "decode_dispatches_per_tick":
+        round((fe.decode_dispatches() - d0) / ticks, 3),
+}))
+"""
+
+
+def bench_shard_scaling() -> dict:
+    """Sharded-slab decode throughput vs device count, strong + weak.
+
+    One subprocess per point: the virtual-device flag binds at jax backend
+    init, so each device count needs a fresh interpreter. Method matches
+    ``bench_tick_scaling``: saturated slab, steady-state compile-excluded
+    per-tick walls. The dispatch/sync columns double as the contract
+    check — sharding must keep 1 logical dispatch and <= 1 sync per tick
+    at every width."""
+    import subprocess
+    import sys
+    import tempfile
+
+    with tempfile.NamedTemporaryFile("w", suffix=".py", delete=False) as f:
+        f.write(_SHARD_WORKER)
+        worker = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(__file__), "..", "src"),
+                    env.get("PYTHONPATH")) if p)
+    env.pop("XLA_FLAGS", None)
+
+    def run_point(devices, fleet):
+        out = subprocess.run([sys.executable, worker, str(devices),
+                              str(fleet)], capture_output=True, text=True,
+                             env=env, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"shard worker {devices}d/{fleet}F failed:\n"
+                               + out.stderr[-2000:])
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("WORKER ")][-1]
+        return json.loads(line[len("WORKER "):])
+
+    strong = [run_point(n, SHARD_FLEET) for n in SHARD_DEVICES]
+    weak = [run_point(n, SHARD_WEAK_PER_DEV * n) for n in SHARD_DEVICES]
+    os.unlink(worker)
+    base = strong[0]["steps_per_s"]
+    ncores = os.cpu_count() or 1
+    return {"shard_scaling": {
+        "method": "one subprocess per device count (virtual-device flag "
+                  "binds at backend init); saturated slab, steady-state "
+                  "per-tick walls, compile ticks and feeder excluded — "
+                  "same method as steps_per_s",
+        "host_cores": ncores,
+        "note": ("virtual devices time-slice %d real core(s): expect "
+                 "flat-to-negative strong scaling below %d cores; the "
+                 "contract columns (1 dispatch, <=1 sync per tick) are "
+                 "hardware-independent" % (ncores, max(SHARD_DEVICES))),
+        "strong_fleet": SHARD_FLEET,
+        "strong": strong,
+        "weak_per_device": SHARD_WEAK_PER_DEV,
+        "weak": weak,
+        "strong_speedup_4dev": round(
+            strong[2]["steps_per_s"] / max(base, 1e-9), 3),
+        "strong_speedup_8dev": round(
+            strong[3]["steps_per_s"] / max(base, 1e-9), 3),
+    }}
+
+
 def bench_int8_capacity(model) -> dict:
     """Bytes of one replica's KV pool, fp32 vs int8 codec."""
     import jax
@@ -598,6 +736,7 @@ def main() -> list:
     blob.update(bench_chunked(model, params, cfg))
     blob.update(bench_tiers(model, params, cfg))
     blob.update(bench_tick_scaling(model, params, cfg))
+    blob.update(bench_shard_scaling())
     blob.update(bench_int8_capacity(model))
     blob.update(bench_control_plane(model, params, cfg))
     os.makedirs(RESULTS, exist_ok=True)
@@ -634,6 +773,11 @@ def main() -> list:
          f"block4 {blob['steps_per_s_block4']['8']}/s)"),
         ("serve/async_speedup_8", blob["async_speedup_8"] * 1e6,
          f"block4 {blob['block4_speedup_8']}x vs eager"),
+        ("serve/shard_strong_speedup_4dev",
+         blob["shard_scaling"]["strong_speedup_4dev"] * 1e6,
+         f"F=8 over 1/2/4/8 virtual devices on "
+         f"{blob['shard_scaling']['host_cores']} core(s); "
+         f"8dev {blob['shard_scaling']['strong_speedup_8dev']}x"),
         ("serve/syncs_per_tick", blob["syncs_per_tick"] * 1e6,
          f"eager {blob['syncs_per_tick_eager']}, "
          f"block4 {blob['syncs_per_tick_block4']}"),

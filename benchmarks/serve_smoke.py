@@ -20,12 +20,22 @@ Guards the admission-path invariants cheap enough for every PR:
     async tick must pay at most ONE blocking host sync per tick
     (``metrics()['syncs'] <= 1``, admissions included) and produce token
     streams bit-identical to the eager oracle; with ``decode_block=4`` the
-    fused windows must engage (total syncs / ticks < 1).
+    fused windows must engage (total syncs / ticks < 1);
+  * **sharded fleet parity** — a child process with 4 virtual devices
+    (``xla_force_host_platform_device_count=4``; the flag must precede
+    jax's backend init, hence the subprocess) runs the same workload
+    through a 4-way ``('fleet',)`` mesh and unsharded: token streams +
+    finish clocks must match bit-for-bit and the sharded run must keep
+    <= 1 blocking sync and one decode dispatch per group per tick.
 
 Exits non-zero on violation (plain asserts); prints the measured numbers so
 CI logs double as a mini-benchmark.
 """
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -189,8 +199,74 @@ def main():
     toks_b = sorted((r.rid, tuple(r.output)) for r in fe_b.finished)
     toks_r = sorted((r.rid, tuple(r.output)) for r in fe_r.finished)
     assert toks_b == toks_r, "fused decode blocks changed token content"
+
+    # ---- sharded fleet parity (child process: 4 virtual devices) ------
+    env = dict(os.environ, SMOKE_SHARD_CHILD="1",
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    child = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                           capture_output=True, text=True, env=env,
+                           timeout=600)
+    sys.stdout.write(child.stdout)
+    assert child.returncode == 0, \
+        f"sharded smoke child failed:\n{child.stderr[-3000:]}"
     print("[smoke] OK")
 
 
+def sharded_child():
+    """Runs with 4 virtual devices (parent set XLA_FLAGS pre-spawn):
+    sharded-vs-unsharded parity + the per-tick dispatch/sync bounds."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.models import make_model
+    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
+
+    assert jax.local_device_count() == 4, jax.local_device_count()
+    mesh = make_fleet_mesh()
+    cfg = get_config("granite-3-8b").reduced()
+    model = make_model(cfg, tp=1)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, int(rng.integers(3, 9)))
+               .tolist() for _ in range(12)]
+
+    def run(use_mesh):
+        def mk(rid):
+            return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                                 max_seq=MAX_SEQ, rid=rid)
+        fe = ElasticClusterFrontend(mk, 2, initial_replicas=2, seed=0,
+                                    mesh=mesh if use_mesh else None)
+        for i, p in enumerate(prompts):
+            fe.submit(Request(i, list(p), max_new_tokens=6))
+        max_syncs = max_disp = 0
+        for _ in range(200):
+            m = fe.tick(0.0)
+            max_syncs = max(max_syncs, m["syncs"])
+            max_disp = max(max_disp, m["decode_dispatches"]
+                           / max(m["fleet_groups"], 1))
+            if not fe.pending and all(n.unfinished() == 0
+                                      for n in fe.nodes):
+                break
+        fe.run_until_drained()
+        streams = sorted((r.rid, tuple(r.output), r.finish_time)
+                         for r in fe.finished)
+        return streams, max_syncs, max_disp
+
+    s_on, syncs_on, disp_on = run(True)
+    s_off, _, _ = run(False)
+    print(f"[smoke] sharded fleet ({jax.local_device_count()} devices): "
+          f"max syncs/tick={syncs_on} "
+          f"max decode_dispatches/group={disp_on:.1f}")
+    assert s_on == s_off, "sharded fleet changed streams vs unsharded"
+    assert syncs_on <= 1, "sharded tick must keep <= 1 blocking sync"
+    assert disp_on <= 1.0, \
+        "sharding must keep ONE logical decode dispatch per group per tick"
+
+
 if __name__ == "__main__":
-    main()
+    if os.environ.get("SMOKE_SHARD_CHILD"):
+        sharded_child()
+    else:
+        main()

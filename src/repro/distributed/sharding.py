@@ -185,8 +185,9 @@ def batch_shardings(plan: ShardPlan, batch_specs):
     return jax.tree.map(one, batch_specs)
 
 
-def serve_state_shardings(plan: ShardPlan, state_specs, cfg):
-    """Decode-state shardings: batch over data, heads over model.
+def _serve_state_entries(name: str, ndim: int, dp, tp) -> tuple:
+    """Per-dim axis entries for one serve-state leaf (batch over data, heads
+    over model) — shared by the per-replica and fleet-slab rule sets.
 
     Leaf layouts (leading stack axis first):
       lm k/v            (L, B, S, G, hd)
@@ -195,25 +196,59 @@ def serve_state_shardings(plan: ShardPlan, state_specs, cfg):
       hybrid attn_k/v   (n_inv, B, S, G, hd)
       encdec self/cross (L, B, S, G, hd)
     """
+    if name in ("k", "v", "attn_k", "attn_v", "self_k", "self_v",
+                "cross_k", "cross_v"):
+        return (None, dp, None, tp, None)
+    if name == "ssm":
+        return (None, dp, tp, None, None)
+    if name == "conv":
+        return (None, dp, None, tp)
+    return (None,) * ndim
+
+
+def serve_state_shardings(plan: ShardPlan, state_specs, cfg):
+    """Decode-state shardings: batch over data, heads over model (see
+    ``_serve_state_entries`` for the leaf layouts)."""
     dp, tp = plan.dp_axes, plan.tp_axis
 
     def one(path, spec):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         shape = spec.shape
-        if name in ("k", "v", "attn_k", "attn_v", "self_k", "self_v",
-                    "cross_k", "cross_v"):
-            entries = (None, dp, None, tp, None)
-        elif name == "ssm":
-            entries = (None, dp, tp, None, None)
-        elif name == "conv":
-            entries = (None, dp, None, tp)
-        else:
-            entries = (None,) * len(shape)
+        entries = _serve_state_entries(name, len(shape), dp, tp)
         entries = [e if _fits(e, d, plan.mesh) else None
                    for e, d in zip(entries, shape)]
         return NamedSharding(plan.mesh, P(*entries))
 
     return jax.tree_util.tree_map_with_path(one, state_specs)
+
+
+def fleet_slab_shardings(mesh: Mesh, slab_specs):
+    """Shardings for a ``FleetGroup`` slab: the leading fleet axis maps over
+    the mesh's ``fleet`` axis (F replicas decode on N devices in parallel);
+    trailing per-replica dims reuse the serve-mode rules on any data/model
+    axes also present (a pure ``('fleet',)`` serving mesh replicates them).
+    Params are NOT sharded this way — they replicate over the fleet axis
+    (every shard decodes its own slab rows with the full weights). A leading
+    dim that does not divide the fleet axis falls back to replication, so
+    callers must keep slab capacity a multiple of the shard count (see
+    ``FleetGroup`` growth)."""
+    if "fleet" not in mesh.axis_names:
+        raise ValueError(
+            f"serving mesh needs a 'fleet' axis, got {mesh.axis_names}")
+    dp = tuple(a for a in ("pod", "data", "expert") if a in mesh.axis_names)
+    dp = dp or None
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(path, spec):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = spec.shape
+        entries = ("fleet",) + _serve_state_entries(name, len(shape) - 1,
+                                                    dp, tp)
+        entries = [e if _fits(e, d, mesh) else None
+                   for e, d in zip(entries, shape)]
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, slab_specs)
 
 
 # -------------------------------------------------- HLO collective analysis

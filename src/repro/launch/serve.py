@@ -44,6 +44,16 @@ and one sync on ticks that admit nothing (saturated decode pays 1/K syncs
 per tick, trading up to K-1 ticks of admission lag under a full slab);
 ``--attn-backend pallas`` decodes attention through the flash-decode
 kernel (interpret mode off-TPU) instead of the dense einsum.
+
+Device scaling: ``--devices N`` shards every fleet group's slab over an
+N-way ``('fleet',)`` mesh so F replicas decode on N devices in parallel
+(same one-logical-dispatch / one-sync tick; bit-identical streams). On a
+CPU box this exposes N *virtual* devices by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — which must happen
+BEFORE the first jax import, which is why this module defers ``import jax``
+into ``main()`` and errors clearly if jax already initialized.
+``--mesh '4:fleet'`` passes an explicit mesh spec instead (a real
+multi-chip mesh on GPU/TPU needs no XLA_FLAGS trick).
 """
 from __future__ import annotations
 
@@ -58,7 +68,7 @@ def _percentiles(xs, qs=(50, 95)):
     return [float(np.percentile(xs, q)) for q in qs]
 
 
-def run_control_loop(args, cfg, model, params):
+def run_control_loop(args, cfg, model, params, mesh=None):
     from repro.configs.paper_cluster import ClusterConfig
     from repro.control import ControlPlane
     from repro.core import balancer as bal
@@ -101,7 +111,7 @@ def run_control_loop(args, cfg, model, params):
         fleet_batch=not args.no_fleet,
         fleet_prefill=not args.no_fleet_prefill,
         async_tick=not args.no_async, decode_block=args.decode_block,
-        tiers=tiers)
+        tiers=tiers, mesh=mesh)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -269,14 +279,42 @@ def main():
                          "weight, optional TTFT target in ticks (control "
                          "mode; default: single tier, identical to the "
                          "untiered scheduler)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard fleet slabs over an N-way ('fleet',) mesh; "
+                         "on CPU exposes N virtual devices via XLA_FLAGS "
+                         "(must run before jax initializes — this flag "
+                         "handles the ordering; 0 = unsharded)")
+    ap.add_argument("--mesh", default="",
+                    help="explicit serving mesh spec 'SHAPE:AXES' (e.g. "
+                         "'4:fleet') over already-visible devices; must "
+                         "include a 'fleet' axis. Overrides --devices' "
+                         "mesh shape but not its virtual-device setup")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    # device-count setup MUST precede the first jax import: XLA reads
+    # --xla_force_host_platform_device_count once at backend init
+    # (launch.mesh itself never imports jax at module level)
+    from repro.launch.mesh import (make_fleet_mesh, parse_mesh_spec,
+                                   set_host_device_count)
+
+    if args.devices > 0:
+        set_host_device_count(args.devices)
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.models.model import make_model
+
+    mesh = None
+    if args.mesh:
+        mesh = parse_mesh_spec(args.mesh)
+    elif args.devices > 0:
+        mesh = make_fleet_mesh(args.devices)
+    if mesh is not None:
+        print(f"[serve] mesh: {dict(zip(mesh.axis_names, mesh.shape.values()))}"
+              f" over {len(mesh.devices.ravel())} device(s)")
 
     cfg = get_config(args.arch).reduced()
     model = make_model(cfg, tp=1)
@@ -287,8 +325,11 @@ def main():
     if control_mode:
         if args.autoscale is None:
             args.autoscale = "gpso" if args.policy == "ours" else "none"
-        run_control_loop(args, cfg, model, params)
+        run_control_loop(args, cfg, model, params, mesh=mesh)
     else:
+        if mesh is not None:
+            print("[serve] note: --devices/--mesh apply to the control-loop "
+                  "mode only; drain mode steps replicas without a fleet slab")
         if args.policy == "wrr":
             args.policy = "fractions"
         run_drain_mode(args, cfg, model, params)

@@ -76,6 +76,20 @@ the saturated-decode regime — at the cost that a slot retiring mid-block
 re-admits only at the block-end reconcile (admission lag <= K-1 ticks
 under a full slab; see the engine docstring).
 
+**Fleet-mesh sharding.** Pass ``mesh=`` (a mesh with a ``fleet`` axis,
+e.g. ``launch.mesh.make_fleet_mesh``) and every fleet group shards its
+slab's fleet axis over the N devices, so F replicas genuinely decode in
+parallel — same ONE logical dispatch per tick (GSPMD partitions it, the
+host still issues one), same ≤1 reconcile sync, bit-identical streams.
+The contract lives in ``FleetGroup``: slab capacity stays a multiple of
+the shard count (pad rows masked inactive, excluded from dispatch/retire
+accounting), churn (scale-up growth, drain retire, failure row-drop)
+keeps live rows dense so they re-balance across contiguous shard blocks,
+and membership changes force-flush pending futures exactly like the
+unsharded async path. Params replicate across the fleet axis. On CPU the
+N devices are virtual (``--xla_force_host_platform_device_count``, set
+before jax initializes — see ``launch/serve.py --devices``).
+
 **SLO tiers.** Pass a ``workload.trace.TierSet`` (and create replicas with
 the same ``tiers=``) to serve several QoS classes over one pool: every
 replica queue becomes a weighted-deficit ``TieredQueue`` (premium admits
@@ -149,7 +163,7 @@ class ElasticClusterFrontend:
                  est_tokens: float = 8.0, fleet_batch: bool = True,
                  fleet_prefill: bool = True, async_tick: bool = True,
                  decode_block: int = 1,
-                 tiers: Optional[TierSet] = None):
+                 tiers: Optional[TierSet] = None, mesh=None):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
         self.tiers = tiers or DEFAULT_TIERS
@@ -160,6 +174,11 @@ class ElasticClusterFrontend:
         self.tick_seconds = tick_seconds
         self.fleet_batch = fleet_batch
         self.fleet_prefill = fleet_prefill and fleet_batch
+        # serving mesh with a 'fleet' axis: fleet groups shard their slab's
+        # fleet axis over it (N devices decode F replicas in parallel; see
+        # FleetGroup's shard contract — capacity stays divisible by the
+        # shard count, churn re-balances dense rows, params replicate)
+        self.mesh = mesh if fleet_batch else None
         # the async tick needs the fleet dispatch paths end to end: with
         # either oracle mode (per-replica decode or per-replica admission)
         # the tick falls back to eager, blocking syncs
@@ -220,7 +239,7 @@ class ElasticClusterFrontend:
                     max_seq=eng.max_seq, cache_dtype=eng.cache_dtype,
                     async_mode=self.async_tick,
                     decode_block=self.decode_block,
-                    attn_backend=eng.attn_backend)
+                    attn_backend=eng.attn_backend, mesh=self.mesh)
             g.add(eng)
         return eng
 

@@ -132,6 +132,17 @@ bound). One block counts as K ticks of decode (finish clocks inside the
 block are ``dispatch_clock + k``) and the reconcile is deferred until the
 block's ticks are spent.
 
+**Fleet-mesh sharding.** A ``FleetGroup`` built with ``mesh=`` (a mesh
+carrying a ``fleet`` axis) lays its slab and async operands out
+``P('fleet', ...)`` over the N devices while params replicate, so GSPMD
+partitions the *same* jitted kernel families row-parallel: F replicas
+decode on N devices under the identical one-dispatch/one-sync tick, with
+bit-identical streams. Slab capacity stays a multiple of the shard count
+(``shards * pow2_bucket(ceil(F/shards))``; pad rows are masked inactive
+and invisible to dispatch/retire accounting) and the dense row packing
+that churn already maintains doubles as the cross-shard re-balance. See
+the ``FleetGroup`` class docstring for the full contract.
+
 ``ClusterFrontend`` stitches several replicas together behind a balancer
 policy — the live counterpart of the fluid simulator. The node-structured
 elastic frontend that plugs into the unified control plane lives in
@@ -148,7 +159,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import fleet_slab_shardings
 from repro.models.model import Model
 from repro.workload.trace import DEFAULT_TIERS, TierSet
 
@@ -713,12 +727,49 @@ class FleetGroup:
     queue on ``pending`` and the deferred host bookkeeping applies at the
     next ``reconcile()`` — one blocking sync per tick (``syncs``), with the
     decode operands persistent on device (``ops``). See the module
-    docstring's async tick contract."""
+    docstring's async tick contract.
+
+    **Shard contract** (``mesh`` with a ``fleet`` axis, N = shard count).
+    The slab's leading fleet axis (and the async operands') is laid out
+    ``NamedSharding(mesh, P('fleet'))`` — device d owns the contiguous row
+    block [d·cap/N, (d+1)·cap/N) — while ``params`` replicate across the
+    fleet axis, so GSPMD partitions the *existing* jitted kernel families
+    row-parallel: still ONE logical dispatch per kernel variant per tick and
+    ONE reconcile sync, now fanned out over N devices. Invariants:
+
+      * **divisibility** — slab capacity is always a multiple of N:
+        ``cap = N * pow2_bucket(ceil(F / N))`` (per-shard sub-capacity grows
+        in pow2 steps, O(log ceil(F/N)) retraces). The extra rows are pad
+        rows exactly like the unsharded spares: masked inactive (never in
+        ``movers``/``active``) and excluded from dispatch and retire
+        accounting, they only burn bounded throwaway compute;
+      * **row re-balance on churn** — live rows stay DENSE in [0, F) (joins
+        append, removals swap-backfill with the last row), so with block
+        layout the F live rows spread across shards as evenly as contiguous
+        blocks allow; membership changes force-flush pending futures first,
+        exactly like the unsharded async path;
+      * **bit-identical streams** — the kernels are mesh-agnostic (sharding
+        only partitions them), so token streams and finish clocks equal the
+        unsharded oracle across churn/async/chunk/tier (tests/
+        test_fleet_shard.py)."""
 
     def __init__(self, model: Model, params, *, max_batch: int, max_seq: int,
                  cache_dtype=jnp.float32, async_mode: bool = False,
-                 decode_block: int = 1, attn_backend: str = "einsum"):
+                 decode_block: int = 1, attn_backend: str = "einsum",
+                 mesh=None):
         self.model = model
+        self.mesh = mesh
+        if mesh is not None and "fleet" not in mesh.axis_names:
+            raise ValueError(
+                f"FleetGroup mesh needs a 'fleet' axis, got "
+                f"{mesh.axis_names}")
+        self.shards = int(mesh.shape["fleet"]) if mesh is not None else 1
+        if mesh is not None:
+            # replicate the weights across the fleet axis once: every shard
+            # decodes its own slab rows against the full params (serve-mode
+            # rule — see distributed.sharding), and a device-0-committed
+            # params array mixed with a sharded slab is a placement error
+            params = jax.device_put(params, NamedSharding(mesh, P()))
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -744,6 +795,31 @@ class FleetGroup:
     def __len__(self) -> int:
         return len(self.members)
 
+    # ------------------------------------------------------------- sharding
+    def _cap_for(self, rows: int) -> int:
+        """Slab capacity for ``rows`` members. Unsharded: the next power of
+        two. Sharded: the per-shard sub-capacity grows in pow2 steps instead
+        (cap = shards * pow2_bucket(ceil(rows / shards))), keeping the fleet
+        axis divisible by the shard count (a non-dividing axis would silently
+        fall back to replication) at the same O(log) retrace bound."""
+        if self.shards == 1:
+            return pow2_bucket(rows)
+        return self.shards * pow2_bucket(-(-rows // self.shards))
+
+    def _replicated(self, x):
+        """Replicate a host/device-0 value over the mesh so eager mixed ops
+        against the sharded slab are placement-legal (eager updates with one
+        mesh-sharded and one device-0-committed operand are an error)."""
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    def _place_slab(self, slab):
+        """Pin the slab's sharding: fleet axis over the mesh's fleet axis,
+        per-replica cache dims under the serve-mode rules."""
+        return jax.device_put(slab, fleet_slab_shardings(self.mesh, slab))
+
+    def _place_ops(self, ops):
+        return jax.device_put(ops, NamedSharding(self.mesh, P("fleet")))
+
     # -------------------------------------------------------------- members
     def add(self, eng: "ReplicaEngine"):
         """Stack ``eng``'s device cache into the slab (any in-flight slot
@@ -754,7 +830,7 @@ class FleetGroup:
             self._stash += self.reconcile(force=True)
         row = len(self.members)
         if row >= self.cap:
-            new_cap = pow2_bucket(row + 1)
+            new_cap = self._cap_for(row + 1)
             if self.slab is None:
                 self.slab = jax.tree.map(
                     lambda c: jnp.zeros((new_cap,) + c.shape, c.dtype),
@@ -769,8 +845,16 @@ class FleetGroup:
                 if self.async_mode:
                     self.ops = jax.tree.map(grow, self.ops)
             self.cap = new_cap
+            if self.mesh is not None:
+                # re-pin after (re)allocation: zeros/concatenate land on the
+                # default device; the slab must carry the fleet sharding so
+                # GSPMD row-partitions every subsequent dispatch
+                self.slab = self._place_slab(self.slab)
+                if self.async_mode:
+                    self.ops = self._place_ops(self.ops)
+        cache = eng.cache if self.mesh is None else self._replicated(eng.cache)
         self.slab = jax.tree.map(lambda s, c: s.at[row].set(c),
-                                 self.slab, eng.cache)
+                                 self.slab, cache)
         if self.async_mode:
             self._seed_ops_row(row, eng)
         eng.cache = None
@@ -806,6 +890,10 @@ class FleetGroup:
         assert eng._fleet is self and self.members[row] is eng
         if restore:
             eng.cache = jax.tree.map(lambda s: s[row], self.slab)
+            if self.mesh is not None:
+                # hand the detached engine a plain single-device cache (the
+                # eager slice above is committed to the whole mesh)
+                eng.cache = jax.device_put(eng.cache, jax.devices()[0])
         last = self.members.pop()
         if last is not eng:          # backfill the hole with the last row
             backfill = lambda s: s.at[row].set(s[len(self.members)])
@@ -824,6 +912,8 @@ class FleetGroup:
         inside ``fleet_prefill`` instead). In async mode the slot also
         registers in the device operands (``req``'s first token was already
         synced by the eager single-admit path)."""
+        if self.mesh is not None:
+            small_state = self._replicated(small_state)
         self.slab = jax.tree.map(
             lambda s, sm: s.at[f, :, slot].set(sm[:, row]),
             self.slab, small_state)
@@ -1666,7 +1756,7 @@ class ClusterFrontend:
 
     def __init__(self, replicas: list, policy: str = "lc",
                  fractions_fn=None, seed: int = 0, fleet_batch: bool = False,
-                 fleet_prefill: Optional[bool] = None):
+                 fleet_prefill: Optional[bool] = None, mesh=None):
         self.replicas = replicas
         self.policy = policy
         self.fractions_fn = fractions_fn
@@ -1675,6 +1765,7 @@ class ClusterFrontend:
         self.finished: list = []
         self._rr = itertools.cycle(range(len(replicas)))
         self.fleets: dict = {}
+        self.mesh = mesh
         self.fleet_prefill = fleet_batch if fleet_prefill is None \
             else (fleet_prefill and fleet_batch)
         if fleet_batch:
@@ -1684,7 +1775,7 @@ class ClusterFrontend:
                     g = self.fleets[eng.fleet_key] = FleetGroup(
                         eng.model, eng.params, max_batch=eng.max_batch,
                         max_seq=eng.max_seq, cache_dtype=eng.cache_dtype,
-                        attn_backend=eng.attn_backend)
+                        attn_backend=eng.attn_backend, mesh=mesh)
                 g.add(eng)
 
     def submit(self, req: Request):
