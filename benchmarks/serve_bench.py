@@ -39,7 +39,15 @@ Phases over real CPU forwards:
     >= N real cores (or real accelerators);
   * **control-plane run** — the original ControlPlane-driven trace for
     TTFT/latency percentiles and the prefill retrace bound, plus the int8
-    KV-cache capacity gain (``cache_dtype="int8"``).
+    KV-cache capacity gain (``cache_dtype="int8"``);
+  * **failure matrix** — closed-loop ``ClientPool`` traffic through the
+    chaos cells: chaos-off baseline, scripted spot preemption (notice,
+    drain, hard drop, recovery), a retry storm (tight timeouts + both
+    nodes preempted back-to-back) and a 1000-user flash crowd ramping in
+    at 50 users/tick. Each cell reports goodput fraction, SLO attainment,
+    retries/abandons, the per-tick goodput curve and the request-
+    conservation ledger (must balance: every rid exactly-once terminal,
+    ``double_served == 0`` — asserted, not just recorded).
 
 Tick-wall stats separate *steady-state* ticks from ticks that hit an XLA
 compile (``serve_kernel_traces`` delta > 0): a single ~1s retrace inside a
@@ -675,6 +683,99 @@ def bench_int8_capacity(model) -> dict:
     }
 
 
+MATRIX_CELLS = {
+    # chaos-off vs chaos-on at identical load isolates the fault's goodput
+    # cost; the storm cell tightens timeouts and drops BOTH nodes so the
+    # retry amplification actually bites; the flash crowd is the headline
+    # closed-loop overload (1000 users, 50/tick ramp, tiny capacity)
+    "chaos_off": dict(clients=48, ticks=32, timeout=10.0, retries=2),
+    "spot_preemption": dict(clients=48, ticks=32, timeout=10.0, retries=2,
+                            chaos="preempt@10:n0:k3,recover@22:n0"),
+    "retry_storm": dict(clients=64, ticks=32, timeout=4.0, retries=3,
+                        think=0.5,
+                        chaos="preempt@8:n0:k2,preempt@10:n1:k2,"
+                              "recover@18:n0,recover@20:n1"),
+    "flash_crowd_1000": dict(clients=1000, ticks=40, timeout=6.0,
+                             retries=1, spawn_rate=50.0, think=4.0),
+}
+
+
+def _run_matrix_cell(model, params, cfg, *, clients, ticks, timeout,
+                     retries, chaos=None, spawn_rate=None, think=1.5,
+                     seed=0) -> dict:
+    from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
+                               ReplicaEngine, Request)
+    from repro.workload import ClientPool
+
+    rng = np.random.default_rng(seed)
+
+    def mk(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid)
+
+    def rf(rid, tick):
+        plen = int(rng.integers(2, 10))
+        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=4)
+
+    fe = ElasticClusterFrontend(
+        mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+        provisioning_delay=2, request_factory=rf, seed=seed,
+        est_tokens=4, preempt_notice=3,
+        chaos=ChaosSchedule.parse(chaos) if chaos else None)
+    pool = ClientPool(fe, clients, request_factory=rf, think_time=think,
+                      timeout=timeout, max_retries=retries,
+                      spawn_rate=spawn_rate, seed=seed + 1)
+    curve = []
+    for _ in range(ticks):
+        pool.tick()
+        m = fe.tick(0.0)
+        curve.append(int(m["goodput"]))
+    pool.quiesce()
+    fe.run_until_drained()
+    pool.finalize()
+    led, s = fe.ledger, pool.summary()
+    states = led.balance()
+    total = max(led.submitted, 1)
+    return {
+        "clients": clients, "ticks": ticks, "chaos": chaos or "",
+        "spawn_rate": spawn_rate,
+        "submitted": led.submitted,
+        "finished": states["finished"], "timed_out": states["timed_out"],
+        "abandoned": states["abandoned"], "rejected": states["rejected"],
+        "retries": led.retries, "duplicates": led.duplicates,
+        "wasted": led.wasted, "double_served": led.double_served,
+        "goodput_frac": round(states["finished"] / total, 3),
+        "slo_attainment": round(s["ok"] / max(s["ok"] + s["abandoned"], 1),
+                                3),
+        "client_e2e_p95_ticks": s["latency_p95"],
+        "preempted_nodes": fe.preempted_nodes,
+        "ledger_balanced": led.balanced(),
+        "goodput_curve": curve,
+    }
+
+
+def bench_failure_matrix(model, params, cfg) -> dict:
+    """Closed-loop clients through the chaos cells (see MATRIX_CELLS).
+
+    Conservation is asserted per cell: an unbalanced ledger or a
+    double-served rid fails the bench outright — a goodput number over
+    lost/duplicated requests is not a goodput number."""
+    out = {}
+    for name, kw in MATRIX_CELLS.items():
+        cell = _run_matrix_cell(model, params, cfg, **kw)
+        assert cell["ledger_balanced"], f"{name}: ledger unbalanced"
+        assert cell["double_served"] == 0, f"{name}: rid served twice"
+        out[name] = cell
+    out["goodput_drop_spot_preemption"] = round(
+        out["chaos_off"]["goodput_frac"]
+        - out["spot_preemption"]["goodput_frac"], 3)
+    out["goodput_drop_retry_storm"] = round(
+        out["chaos_off"]["goodput_frac"]
+        - out["retry_storm"]["goodput_frac"], 3)
+    return {"failure_matrix": out}
+
+
 def bench_control_plane(model, params, cfg) -> dict:
     """The original autoscaled trace: latency percentiles + retraces."""
     from repro.configs.paper_cluster import ClusterConfig
@@ -739,6 +840,7 @@ def main() -> list:
     blob.update(bench_shard_scaling())
     blob.update(bench_int8_capacity(model))
     blob.update(bench_control_plane(model, params, cfg))
+    blob.update(bench_failure_matrix(model, params, cfg))
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "BENCH_serve.json"), "w") as f:
         json.dump(blob, f, indent=2, sort_keys=True)
@@ -787,6 +889,15 @@ def main() -> list:
          f"p50={blob['latency_p50_ticks']:.1f}t"),
         ("serve/prefill_retraces", float(blob["prefill_retraces"]),
          f"{blob['requests']}req"),
+        ("serve/goodput_chaos_off",
+         blob["failure_matrix"]["chaos_off"]["goodput_frac"] * 1e6,
+         f"spot {blob['failure_matrix']['spot_preemption']['goodput_frac']}"
+         f" storm {blob['failure_matrix']['retry_storm']['goodput_frac']}"),
+        ("serve/goodput_flash_crowd_1000",
+         blob["failure_matrix"]["flash_crowd_1000"]["goodput_frac"] * 1e6,
+         f"{blob['failure_matrix']['flash_crowd_1000']['retries']} retries,"
+         f" {blob['failure_matrix']['flash_crowd_1000']['abandoned']}"
+         " abandoned"),
     ]
 
 

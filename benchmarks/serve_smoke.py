@@ -200,6 +200,70 @@ def main():
     toks_r = sorted((r.rid, tuple(r.output)) for r in fe_r.finished)
     assert toks_b == toks_r, "fused decode blocks changed token content"
 
+    # ---- chaos drill: preemption + closed-loop clients ----------------
+    # scripted spot preemption mid-load under retrying clients: the ledger
+    # must balance (every rid exactly-once terminal, nothing served twice)
+    # and the tick contract must hold through drain + hard drop
+    from repro.serving import ChaosSchedule
+    from repro.workload import ClientPool
+
+    def mk_chaosrep(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid)
+
+    def cf(rid, tick):
+        return Request(rid, rng.integers(1, cfg.vocab_size, 5).tolist(),
+                       max_new_tokens=4)
+
+    fe_c = ElasticClusterFrontend(
+        mk_chaosrep, 2, initial_replicas=2, max_replicas_per_node=2,
+        provisioning_delay=2, request_factory=cf, seed=0,
+        preempt_notice=3,
+        chaos=ChaosSchedule.parse("preempt@6:n0:k3,recover@14:n0"))
+    pool = ClientPool(fe_c, 12, request_factory=cf, think_time=1.0,
+                      timeout=6.0, max_retries=2, seed=1)
+    max_syncs_c = max_disp_c = 0.0
+    churn_over = steady_over = 0
+    for _ in range(20):
+        n_before = sum(len(n.live) + len(n.draining) for n in fe_c.nodes)
+        pool.tick()
+        m = fe_c.tick(0.0)
+        n_after = sum(len(n.live) + len(n.draining) for n in fe_c.nodes)
+        # steady-state contract: ONE reconcile sync per live fleet group
+        # per tick. Membership churn (drain retire, preemption drop)
+        # legitimately force-flushes that group's pending futures — one
+        # extra sync on the tick a group's rows unstack, never more.
+        over = m["syncs"] - max(m["fleet_groups"], 1)
+        if over > 0:
+            if n_after != n_before:
+                churn_over += 1
+                assert over <= 1, "churn tick paid more than one flush"
+            else:
+                steady_over += 1
+        max_syncs_c = max(max_syncs_c, m["syncs"])
+        if m["decode_dispatches"]:
+            max_disp_c = max(max_disp_c, m["decode_dispatches"]
+                             / max(m["fleet_groups"], 1))
+    pool.quiesce()
+    fe_c.run_until_drained()
+    pool.finalize()
+    led = fe_c.ledger
+    s = pool.summary()
+    print(f"[smoke] chaos drill: preempted_nodes={fe_c.preempted_nodes} "
+          f"submitted={led.submitted} ok={s['ok']} retries={s['retries']} "
+          f"abandoned={s['abandoned']} double_served={led.double_served} "
+          f"max syncs/tick={max_syncs_c:.0f} "
+          f"(churn flush ticks={churn_over}) "
+          f"max decode_dispatches/group={max_disp_c:.1f}")
+    assert fe_c.preempted_nodes >= 1, "scripted preemption did not fire"
+    assert led.balanced(), f"ledger unbalanced under chaos: {led.balance()}"
+    assert led.double_served == 0, "a request was served twice"
+    assert s["ok"] > 0, "no goodput under the chaos drill"
+    assert steady_over == 0, \
+        "chaos broke the one-sync-per-group bound on a churn-free tick"
+    assert max_disp_c <= 1.0, \
+        "chaos broke the one-decode-dispatch-per-group bound"
+
     # ---- sharded fleet parity (child process: 4 virtual devices) ------
     env = dict(os.environ, SMOKE_SHARD_CHILD="1",
                XLA_FLAGS="--xla_force_host_platform_device_count=4")

@@ -50,6 +50,9 @@ class ClusterConfig:
     target_load: float = 0.7         # provisioning headroom (L_i target)
     slo_lam: float = 8.0             # tier-weighted SLO-violation cost weight
     #   (the Eq.9 extension used when the backend reports tier_pressure)
+    risk_lam: float = 4.0            # spot preemption-risk cost weight
+    #   (the Eq.9 extension used when the backend reports preempt_risk;
+    #    inert while the risk signal is all zeros)
     ga_pop: int = 64
     ga_generations: int = 20
     ga_elite: int = 16

@@ -30,6 +30,26 @@ Untiered backends simply omit the keys and the control plane falls back to
 the original objective/reward — both implementations here emit the same key
 set for the same tier configuration, which is what keeps policy rankings
 consistent across the fluid and request-level backends.
+
+**Robustness metrics (always on, PR 7).** Both backends' metrics dicts also
+carry the failure-matrix signals:
+
+  * ``goodput`` — scalar: completions this tick that beat their
+    ``deadline_tick`` (requests without a deadline always count);
+  * ``timed_out`` — scalar: completions this tick retired by deadline
+    expiry (``Request.expired``) — truncated output, not goodput;
+  * ``preempt_risk`` — (N,) float 0/1: nodes currently under a spot
+    preemption notice (draining, will hard-drop). Consumed by the GPSO
+    plan's preemption-risk cost term (``ClusterConfig.risk_lam``) so the
+    planner shifts replicas off doomed nodes before the drop.
+
+When chaos/deadlines are off these are identically zero and the planner's
+``.any()`` guard keeps the base objective — untouched workloads see
+bit-identical streams and plans. Exactly-once accounting (the
+``RequestLedger``: every rid ends in exactly one of finished / timed-out /
+abandoned / rejected, never served twice) lives on the elastic frontend as
+``fe.ledger``; the fluid backend conserves work in aggregate via its
+``retry_pool`` instead.
 """
 from __future__ import annotations
 

@@ -167,10 +167,13 @@ class ControlPlane:
                 node_demand = peak * np.maximum(self.fractions,
                                                 1.0 / (4 * n))
                 # tiered backends report a weighted per-node backlog; the
-                # plan then optimizes Eq.9 + the SLO-violation cost term
+                # plan then optimizes Eq.9 + the SLO-violation cost term.
+                # chaos-aware backends report per-node preemption risk; any
+                # nonzero risk adds the Eq.9 spot-churn cost term
                 target = self.scaler.plan(node_demand, self.t, in_flight,
                                           node_speed=self.backend.node_speed,
-                                          slo_pressure=m.get("tier_pressure"))
+                                          slo_pressure=m.get("tier_pressure"),
+                                          preempt_risk=m.get("preempt_risk"))
                 self.backend.scale_to(target)
             else:
                 # emergency path: instantaneous overload on a node triggers

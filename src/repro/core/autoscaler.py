@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gpso import ga_only_minimize, gpso_minimize, slo_violation_cost
+from repro.core.gpso import (ga_only_minimize, gpso_minimize,
+                             preemption_risk_cost, slo_violation_cost)
 
 
 def eq9_fitness(R, ctx):
@@ -60,6 +61,30 @@ def eq9_tiered_fitness(R, ctx):
     return base + slo_lam * slo_violation_cost(load, pressure, target)
 
 
+def eq9_risk_fitness(R, ctx):
+    """Eq.9 extended with the spot preemption-risk cost term.
+
+    ctx = eq9 ctx ++ (risk_lam, risk (N,)): ``risk`` is the backends'
+    ``preempt_risk`` metric (1 on nodes under a preemption notice or down).
+    Replicas placed on at-risk nodes cost extra — their work is expected to
+    be evacuated and re-served — so the planner shifts capacity to stable
+    nodes before the notice expires."""
+    risk_lam, risk = ctx[5], ctx[6]
+    return eq9_fitness(R, ctx[:5]) + \
+        risk_lam * preemption_risk_cost(jnp.round(R), risk)
+
+
+def eq9_tiered_risk_fitness(R, ctx):
+    """Tiered Eq.9 + preemption risk (the full failure-matrix objective).
+
+    ctx = eq9 ctx ++ (slo_lam, pressure) ++ (risk_lam, risk) — the tuple is
+    extended in this fixed order so each fitness variant keeps a stable
+    traced signature (one jit cache entry per variant)."""
+    risk_lam, risk = ctx[7], ctx[8]
+    return eq9_tiered_fitness(R, ctx[:7]) + \
+        risk_lam * preemption_risk_cost(jnp.round(R), risk)
+
+
 @dataclasses.dataclass
 class GPSOAutoscaler:
     """The paper's autoscaler: demand forecast -> GPSO plan (Eq.9-11).
@@ -79,12 +104,16 @@ class GPSOAutoscaler:
     def plan(self, node_demand: np.ndarray, tick: int,
              current: np.ndarray,
              node_speed: Optional[np.ndarray] = None,
-             slo_pressure: Optional[np.ndarray] = None) -> np.ndarray:
+             slo_pressure: Optional[np.ndarray] = None,
+             preempt_risk: Optional[np.ndarray] = None) -> np.ndarray:
         """node_demand: (N,) forecast peak demand per node -> replicas (N,).
 
         slo_pressure: optional (N,) tier-weighted backlog (the backends'
         ``tier_pressure`` metric); when given, the plan optimizes the
-        tiered Eq.9 objective."""
+        tiered Eq.9 objective. preempt_risk: optional (N,) spot-churn
+        signal (``preempt_risk`` metric); when any node is at risk the
+        objective gains the preemption-risk cost term. All-zero signals
+        keep the base objective — bit-parity with the pre-chaos planner."""
         cfg = self.cluster_cfg
         n = node_demand.shape[0]
         if node_speed is None:
@@ -101,6 +130,11 @@ class GPSOAutoscaler:
             fitness = eq9_tiered_fitness
             ctx = ctx + (jnp.float32(cfg.slo_lam),
                          jnp.asarray(p, jnp.float32))
+        if preempt_risk is not None and np.asarray(preempt_risk).any():
+            fitness = eq9_tiered_risk_fitness \
+                if fitness is eq9_tiered_fitness else eq9_risk_fitness
+            ctx = ctx + (jnp.float32(getattr(cfg, "risk_lam", 1.0)),
+                         jnp.asarray(preempt_risk, jnp.float32))
         minimize = gpso_minimize if self.optimizer == "gpso" else \
             ga_only_minimize
         best, cost, _ = minimize(

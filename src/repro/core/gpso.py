@@ -33,6 +33,20 @@ def slo_violation_cost(load, pressure, target):
                    axis=-1)
 
 
+def preemption_risk_cost(alloc, risk):
+    """Spot-churn cost term for Eq.9 objectives.
+
+    alloc: (P, N) candidate replica share per node; risk: (N,) per-node
+    preemption-risk signal (1 while a node is under a spot notice or down,
+    0 otherwise — see ``ElasticClusterFrontend.preempt_risk`` /
+    ``ClusterSim``). Returns (P,): the allocation mass placed on at-risk
+    nodes. Every replica bought there is expected to be evacuated and its
+    in-flight work re-served, so the optimizer shifts capacity onto stable
+    nodes *before* the notice expires instead of reacting to the drop.
+    Zero risk makes the term vanish and Eq.9 reduces to its base form."""
+    return jnp.sum(risk[None, :] * alloc, axis=-1)
+
+
 def _roulette(key, costs, n: int):
     """Sample n indices with probability ∝ softmax(-normalized cost)."""
     z = (costs - costs.mean()) / (costs.std() + 1e-9)

@@ -68,12 +68,28 @@ def _percentiles(xs, qs=(50, 95)):
     return [float(np.percentile(xs, q)) for q in qs]
 
 
+def _parse_timeout(spec: str):
+    """'8' -> scalar ticks; 'premium:4,batch:16' -> per-tier dict."""
+    try:
+        return float(spec)
+    except ValueError:
+        out = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            name, _, val = part.partition(":")
+            if not val:
+                raise ValueError(f"bad timeout entry {part!r}")
+            out[name] = float(val)
+        return out
+
+
 def run_control_loop(args, cfg, model, params, mesh=None):
     from repro.configs.paper_cluster import ClusterConfig
     from repro.control import ControlPlane
     from repro.core import balancer as bal
-    from repro.serving import ElasticClusterFrontend, ReplicaEngine, Request
-    from repro.workload import TraceConfig, generate_trace, parse_tiers
+    from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
+                               ReplicaEngine, Request)
+    from repro.workload import (ClientPool, TraceConfig, generate_trace,
+                                parse_tiers)
 
     tiers = parse_tiers(args.tiers)
     ccfg = ClusterConfig(
@@ -102,6 +118,7 @@ def run_control_loop(args, cfg, model, params, mesh=None):
         return req
 
     est_tokens = 8.0
+    chaos = ChaosSchedule.parse(args.chaos) if args.chaos else None
     fe = ElasticClusterFrontend(
         make_replica, args.nodes, initial_replicas=args.replicas,
         provisioning_delay=args.provision_delay,
@@ -111,7 +128,18 @@ def run_control_loop(args, cfg, model, params, mesh=None):
         fleet_batch=not args.no_fleet,
         fleet_prefill=not args.no_fleet_prefill,
         async_tick=not args.no_async, decode_block=args.decode_block,
-        tiers=tiers, mesh=mesh)
+        tiers=tiers, mesh=mesh,
+        preempt_notice=args.preempt_notice, chaos=chaos)
+    pool = None
+    if args.clients > 0:
+        # closed loop: the pool replaces the open-loop arrival trace (the
+        # frontend's request_factory goes unused at arrival_rate 0)
+        pool = ClientPool(
+            fe, args.clients, request_factory=request_factory,
+            think_time=args.think_time,
+            timeout=_parse_timeout(args.timeout),
+            max_retries=args.retries, spawn_rate=args.spawn_rate,
+            seed=args.seed + 1)
 
     balancer = {"ours": "rl", "rr": "rr", "lc": "lc", "wrr": "wrr",
                 "fractions": "wrr"}[args.policy]
@@ -131,17 +159,26 @@ def run_control_loop(args, cfg, model, params, mesh=None):
 
     print(f"[serve] unified loop: balancer={balancer} "
           f"autoscale={args.autoscale} nodes={args.nodes} "
-          f"ticks={args.ticks}")
+          f"ticks={args.ticks}"
+          + (f" clients={args.clients}" if pool else "")
+          + (f" chaos={args.chaos!r}" if chaos else ""))
     t0 = time.time()
     for t in range(args.ticks):
-        m = plane.step(float(arrivals[t]))
+        if pool is not None:
+            pool.tick()                     # closed loop drives arrivals
+        m = plane.step(0.0 if pool is not None else float(arrivals[t]))
         if t % 10 == 0 or t == args.ticks - 1:
             print(f"[serve] t={t:3d} arrivals={arrivals[t]:5.1f}/tick "
                   f"replicas={m['active_replicas'].tolist()} "
                   f"queue={m['queue'].astype(int).tolist()} "
                   f"util={m['mean_utilization']:.2f} "
-                  f"resp={m['response_time']:.1f}t")
+                  f"resp={m['response_time']:.1f}t "
+                  f"goodput={m['goodput']:.0f}")
+    if pool is not None:
+        pool.quiesce()
     fe.run_until_drained()
+    if pool is not None:
+        pool.finalize()
     wall = time.time() - t0
 
     done = fe.finished
@@ -177,6 +214,43 @@ def run_control_loop(args, cfg, model, params, mesh=None):
                     att = f" SLO({spec.ttft_target:g}t)={ok:.0%}"
                 print(f"[serve]   tier {spec.name:<10} n={len(sub):4d} "
                       f"TTFT p50={tt[0]:.1f} p95={tt[1]:.1f}{att}")
+
+    # ------------------------------------------------ robustness report
+    led = fe.ledger
+    states = led.balance()
+    print(f"[serve] ledger: submitted={led.submitted} "
+          f"finished={states['finished']} timed_out={states['timed_out']} "
+          f"abandoned={states['abandoned']} rejected={states['rejected']} "
+          f"retries={led.retries} duplicates={led.duplicates} "
+          f"wasted={led.wasted} double_served={led.double_served} "
+          f"balanced={led.balanced()}")
+    for tname, row in sorted(led.per_tier.items()):
+        total = max(row["finished"] + row["timed_out"]
+                    + row["abandoned"] + row["rejected"], 1)
+        print(f"[serve]   ledger tier {tname:<10} "
+              f"goodput={row['finished']}/{total} "
+              f"({row['finished'] / total:.0%}) "
+              f"timed_out={row['timed_out']} abandoned={row['abandoned']} "
+              f"rejected={row['rejected']} retries={row['retries']}")
+    if fe.preempted_nodes or fe.preempted_replicas:
+        print(f"[serve] preemptions: nodes={fe.preempted_nodes} "
+              f"replicas={fe.preempted_replicas}")
+    if pool is not None:
+        s = pool.summary()
+        lm = s["latency_mean"]
+        lp = s["latency_p95"]
+        print(f"[serve] clients: n={s['clients']} issued={s['issued']} "
+              f"ok={s['ok']} timed_out={s['timed_out']} "
+              f"retries={s['retries']} abandoned={s['abandoned']} "
+              f"rejected={s['rejected']}"
+              + (f" e2e mean={lm:.1f}t p95={lp:.1f}t"
+                 if lm is not None else ""))
+        for tname, row in sorted(s["per_tier"].items()):
+            n_rids = max(row["ok"] + row["abandoned"], 1)
+            print(f"[serve]   clients tier {tname:<10} "
+                  f"goodput={row['ok']}/{n_rids} "
+                  f"({row['ok'] / n_rids:.0%}) "
+                  f"retries={row['retries']} abandoned={row['abandoned']}")
 
 
 def run_drain_mode(args, cfg, model, params):
@@ -248,6 +322,25 @@ def main():
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--provision-delay", type=int, default=3)
     ap.add_argument("--failure-rate", type=float, default=0.0)
+    ap.add_argument("--clients", type=int, default=0,
+                    help="closed-loop client count; >0 replaces the "
+                         "open-loop arrival trace with a ClientPool")
+    ap.add_argument("--think-time", type=float, default=2.0,
+                    help="mean client think time between requests (ticks)")
+    ap.add_argument("--timeout", default="8",
+                    help="per-attempt deadline in ticks: scalar ('8') or "
+                         "per-tier dict ('premium:4,batch:16,default:8')")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="max retries per request before a client abandons")
+    ap.add_argument("--spawn-rate", type=float, default=None,
+                    help="clients activated per tick (flash-crowd ramp); "
+                         "default: all at once")
+    ap.add_argument("--preempt-notice", type=int, default=3,
+                    help="ticks of drain notice before a preempted node's "
+                         "rows are dropped (spot semantics)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault script, e.g. "
+                         "'preempt@12:n0:k3,fail@8:n1:r0,recover@40:n0'")
     ap.add_argument("--no-fleet", action="store_true",
                     help="disable fleet-batched decode (per-replica jit "
                          "dispatch loop; A/B baseline)")

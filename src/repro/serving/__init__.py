@@ -1,4 +1,6 @@
-from repro.serving.elastic import ElasticClusterFrontend  # noqa: F401
+from repro.serving.elastic import (  # noqa: F401
+    ChaosSchedule, ElasticClusterFrontend, RequestLedger,
+)
 from repro.serving.engine import (  # noqa: F401
     ClusterFrontend, FleetGroup, ReplicaEngine, Request, TieredQueue,
     normalize_fractions, pow2_bucket, total_prefill_traces,

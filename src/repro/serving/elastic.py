@@ -104,9 +104,32 @@ so churn never scrambles the starvation accounting. Tiering reorders which
 requests admit first; the fleet dispatch bounds (one decode dispatch per
 group per tick, one prefill dispatch per distinct bucket shape) are
 untouched.
+
+**Robustness layer** (closed-loop clients + spot preemption). Every rid
+that enters ``submit`` is tracked by a ``RequestLedger`` until it lands in
+exactly one terminal state — ``finished`` / ``timed_out`` / ``abandoned`` /
+``rejected`` — so retry storms can never lose or double-serve a request:
+a re-submitted rid is *suppressed* while an attempt is live (or already
+served/abandoned) and accepted as a retry only from ``timed_out`` /
+``rejected``, guaranteeing at most one attempt-object per rid in the
+system. Deadlines (``Request.deadline_tick``) retire inside the existing
+fleet/afleet retire rule (see ``engine``); queued work whose deadline
+already passed is culled before it wastes a prefill — at the frontend
+sweep for ``pending`` + node queues and at the replica queue head in
+``plan_admission``. Spot preemption takes whole nodes: ``preempt_node``
+(or a scripted ``ChaosSchedule`` event) starts a K-tick notice — every
+live replica drains under the deadline, spawns are cancelled, and when
+the notice expires whatever is still in flight is hard-dropped and
+re-queued through the same evacuate + ``_requeue_merged`` path as a
+failure. ``metrics()`` grows three always-on keys — ``goodput`` /
+``timed_out`` (this tick's completions that met / missed their deadline)
+and ``preempt_risk`` (per-node 0/1 notice-or-down signal the GPSO planner
+consumes as Eq.9 risk cost) — all zeros when chaos is off, so streams and
+planner behavior stay bit-identical to the pre-chaos stack.
 """
 from __future__ import annotations
 
+import re
 from collections import deque
 from typing import Callable, Optional
 
@@ -133,8 +156,173 @@ def _requeue_merged(queue, reqs) -> None:
         queue.append(r)
 
 
+_TERMINAL_STATES = ("finished", "timed_out", "abandoned", "rejected")
+_RETRYABLE_STATES = ("timed_out", "rejected")
+
+
+class RequestLedger:
+    """Exactly-once request accounting for the frontend.
+
+    Every rid is a state machine: ``live`` while an attempt is in the
+    system, then exactly one of ``finished`` / ``timed_out`` /
+    ``abandoned`` / ``rejected``. Retries (same rid, fresh ``Request``
+    object) are accepted only from the retryable terminal states
+    (``timed_out``, ``rejected``); a re-submit racing a live attempt or a
+    completed/abandoned rid is *suppressed* — that single rule guarantees
+    at most one attempt per rid is ever in flight, so no queue surgery is
+    needed for duplicate suppression. A completion that arrives for an
+    ``abandoned`` rid counts as ``wasted`` work (the client left; the
+    tokens are not goodput); a completion for any other terminal state
+    increments ``double_served``, the self-check that must stay 0.
+    Per-tier rows count terminal *events* (a rid that times out twice and
+    then finishes contributes 2 timed_out + 1 finished events)."""
+
+    def __init__(self):
+        self.state: dict = {}       # rid -> state
+        self.tier: dict = {}        # rid -> tier name (at first register)
+        self.submitted = 0          # distinct rids ever registered
+        self.retries = 0            # accepted re-submits
+        self.duplicates = 0         # suppressed re-submits
+        self.wasted = 0             # completions of abandoned rids
+        self.double_served = 0      # completions in a served state: MUST be 0
+        self._per_tier: dict = {}
+
+    def tier_row(self, tier: str) -> dict:
+        return self._per_tier.setdefault(
+            tier, {"finished": 0, "timed_out": 0, "abandoned": 0,
+                   "rejected": 0, "retries": 0})
+
+    @property
+    def per_tier(self) -> dict:
+        return self._per_tier
+
+    def register(self, req: Request) -> bool:
+        """Admit ``req`` into the ledger. True = accept (fresh rid or a
+        legal retry), False = suppress (duplicate of a live / finished /
+        abandoned rid — the caller must NOT enqueue it)."""
+        st = self.state.get(req.rid)
+        if st is None:
+            self.state[req.rid] = "live"
+            self.tier[req.rid] = req.tier
+            self.submitted += 1
+            return True
+        if st in _RETRYABLE_STATES:
+            self.state[req.rid] = "live"
+            self.retries += 1
+            self.tier_row(self.tier[req.rid])["retries"] += 1
+            return True
+        self.duplicates += 1
+        return False
+
+    def reject(self, req: Request) -> None:
+        """Admission control turned the (just-registered) attempt away."""
+        self.state[req.rid] = "rejected"
+        self.tier_row(self.tier[req.rid])["rejected"] += 1
+
+    def abandon(self, rid: int) -> bool:
+        """The client gave up on ``rid``. Legal from ``live`` (the attempt
+        still in the system will complete as wasted work), ``timed_out``
+        and ``rejected``; a no-op after ``finished`` (the client already
+        got the answer)."""
+        st = self.state.get(rid)
+        if st in ("live",) + _RETRYABLE_STATES:
+            self.state[rid] = "abandoned"
+            self.tier_row(self.tier[rid])["abandoned"] += 1
+            return True
+        return False
+
+    def resolve(self, req: Request) -> str:
+        """Classify a completion coming out of the engines: ``finished``
+        if it met its deadline, ``timed_out`` if it expired (deadline
+        retire or queue cull), ``abandoned``+wasted if the client already
+        left. Unknown rids (engine-level callers that bypassed ``submit``)
+        are registered on the spot so the ledger still balances."""
+        st = self.state.get(req.rid)
+        if st is None:
+            self.submitted += 1
+            self.tier[req.rid] = req.tier
+            st = "live"
+        if st == "abandoned":
+            self.wasted += 1
+            return "abandoned"
+        if st != "live":
+            self.double_served += 1      # exactly-once violation
+            return st
+        end = "timed_out" if req.expired else "finished"
+        self.state[req.rid] = end
+        self.tier_row(self.tier[req.rid])[end] += 1
+        return end
+
+    def balance(self) -> dict:
+        """Final-state histogram over all rids (+ the event counters)."""
+        by = {k: 0 for k in ("live",) + _TERMINAL_STATES}
+        for st in self.state.values():
+            by[st] += 1
+        by.update(submitted=self.submitted, retries=self.retries,
+                  duplicates=self.duplicates, wasted=self.wasted,
+                  double_served=self.double_served)
+        return by
+
+    def balanced(self) -> bool:
+        """Conservation check: every submitted rid is in exactly one
+        terminal state, and nothing was ever served twice."""
+        b = self.balance()
+        return (b["live"] == 0 and self.double_served == 0
+                and sum(b[k] for k in _TERMINAL_STATES) == len(self.state))
+
+
+class ChaosSchedule:
+    """Deterministic scripted chaos: fail / preempt / recover events keyed
+    by tick. Spec syntax (comma-separated)::
+
+        preempt@12:n0:k3   # tick 12: preemption notice on node 0, K=3
+        preempt@20:n1      # frontend-default notice
+        fail@8:n1:r0       # tick 8: kill node 1's live replica 0
+        fail@9:n0          # replica 0 by default
+        recover@40:n0      # tick 40: bring node 0 back from 'down'
+
+    Events validate at parse time (syntax) and again when applied (node /
+    replica indices and liveness — see ``fail_replica`` & friends)."""
+
+    _EVENT = re.compile(
+        r"^(?P<kind>preempt|fail|recover)@(?P<tick>\d+):n(?P<node>\d+)"
+        r"(?::(?P<argkind>[kr])(?P<arg>\d+))?$")
+
+    def __init__(self):
+        self.events: dict = {}       # tick -> [(kind, node, arg|None)]
+
+    def add(self, tick: int, kind: str, node: int, arg: Optional[int] = None):
+        if kind not in ("preempt", "fail", "recover"):
+            raise ValueError(f"unknown chaos event kind {kind!r}")
+        self.events.setdefault(int(tick), []).append((kind, int(node), arg))
+        return self
+
+    @classmethod
+    def parse(cls, spec: str) -> "ChaosSchedule":
+        sched = cls()
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            m = cls._EVENT.match(part)
+            if m is None:
+                raise ValueError(
+                    f"bad chaos event {part!r} — expected "
+                    "'preempt@T:nN[:kK]', 'fail@T:nN[:rR]' or "
+                    "'recover@T:nN'")
+            kind, argkind = m["kind"], m["argkind"]
+            if argkind == "k" and kind != "preempt":
+                raise ValueError(f"{part!r}: ':k' only applies to preempt")
+            if argkind == "r" and kind != "fail":
+                raise ValueError(f"{part!r}: ':r' only applies to fail")
+            sched.add(int(m["tick"]), kind, int(m["node"]),
+                      int(m["arg"]) if m["arg"] is not None else None)
+        return sched
+
+    def pop(self, tick: int) -> list:
+        return self.events.get(tick, [])
+
+
 class _Node:
-    __slots__ = ("live", "draining", "spawning", "queue", "credit")
+    __slots__ = ("live", "draining", "spawning", "queue", "credit",
+                 "preempt_left", "down")
 
     def __init__(self, tiers: TierSet):
         self.live: list = []        # serving ReplicaEngines
@@ -144,6 +332,8 @@ class _Node:
         # — replica queues only buffer up to max_batch), single-tier == FIFO
         self.queue: TieredQueue = TieredQueue(tiers)
         self.credit: dict = {}      # engine id -> fractional step credit
+        self.preempt_left = -1      # ticks of preemption notice left; -1=none
+        self.down = False           # preempted away; needs recover_node
 
     def unfinished(self) -> int:
         return len(self.queue) + sum(e.load for e in self.live) + \
@@ -163,13 +353,19 @@ class ElasticClusterFrontend:
                  est_tokens: float = 8.0, fleet_batch: bool = True,
                  fleet_prefill: bool = True, async_tick: bool = True,
                  decode_block: int = 1,
-                 tiers: Optional[TierSet] = None, mesh=None):
+                 tiers: Optional[TierSet] = None, mesh=None,
+                 preempt_notice: int = 0,
+                 chaos: Optional[ChaosSchedule] = None,
+                 max_queue: Optional[int] = None):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
         self.tiers = tiers or DEFAULT_TIERS
         self.provisioning_delay = int(provisioning_delay)
         self.max_replicas_per_node = max_replicas_per_node
         self.failure_rate = failure_rate
+        self.preempt_notice = int(preempt_notice)  # default K for preemptions
+        self.chaos = chaos                # scripted fail/preempt/recover
+        self.max_queue = max_queue        # admission cap -> 'rejected' rids
         self.request_factory = request_factory
         self.tick_seconds = tick_seconds
         self.fleet_batch = fleet_batch
@@ -194,7 +390,12 @@ class ElasticClusterFrontend:
         self.pending: deque = deque()
         self.finished: list = []
         self.failed_replicas = 0
+        self.preempted_replicas = 0   # hard-dropped at notice expiry
+        self.preempted_nodes = 0
         self.replica_ticks = 0
+        self.ledger = RequestLedger()
+        self._tick_goodput = 0        # this tick's in-deadline completions
+        self._tick_timed_out = 0      # this tick's expired completions
         self._fractions = np.full(num_nodes, 1.0 / num_nodes, np.float32)
         self._m: dict = {}
         self._est_tokens = float(est_tokens)  # EMA of tokens per request
@@ -322,10 +523,40 @@ class ElasticClusterFrontend:
         """Replicas ever created (incl. failed/retired ones)."""
         return self._rid
 
-    def submit(self, req: Request):
+    def alloc_rid(self) -> int:
+        """Hand out a fresh request id (shared counter with the open-loop
+        arrival generator, so closed-loop clients never collide)."""
+        rid = self._req_id
+        self._req_id += 1
+        return rid
+
+    def _outstanding(self) -> int:
+        return len(self.pending) + sum(n.unfinished() for n in self.nodes)
+
+    def submit(self, req: Request) -> bool:
+        """Submit one attempt. Returns False when the attempt was NOT
+        enqueued: either suppressed as a duplicate (an attempt for this rid
+        is live, or the rid already finished / was abandoned — exactly-once
+        guarantee) or rejected by the ``max_queue`` admission cap. Retries
+        of timed-out / rejected rids are accepted; each retry must be a
+        FRESH ``Request`` object (never re-submit a served-on object)."""
         if req.arrival == 0.0:
             req.arrival = float(self.t)
+        if not self.ledger.register(req):
+            return False
+        if self.max_queue is not None and self._outstanding() >= self.max_queue:
+            self.ledger.reject(req)
+            return False
         self.pending.append(req)
+        return True
+
+    def abandon(self, rid: int) -> bool:
+        """Client-side abandonment: the rid's terminal state becomes
+        ``abandoned``; a live attempt keeps running and its completion
+        counts as wasted work (not goodput). Queued attempts with a
+        deadline are culled by the expiry sweep; abandonment never reaches
+        into queues, so streams are unaffected."""
+        return self.ledger.abandon(rid)
 
     # ------------------------------------------------- ClusterBackend API
     def up_mask(self) -> np.ndarray:
@@ -380,6 +611,8 @@ class ElasticClusterFrontend:
         """Adds go through cold-start provisioning; removals drain first."""
         target = np.asarray(target)
         for i, node in enumerate(self.nodes):
+            if node.down or node.preempt_left >= 0:
+                continue              # never spawn onto a doomed/dead node
             tgt = int(np.clip(target[i], 0, self.max_replicas_per_node))
             in_flight = len(node.live) + len(node.spawning)
             if tgt > in_flight:
@@ -403,12 +636,117 @@ class ElasticClusterFrontend:
         node.draining.append(eng)
 
     # ------------------------------------------------------------ failures
+    def _check_node(self, node_idx: int) -> _Node:
+        """Shared validation for the chaos entry points: a clear
+        ``ValueError`` instead of a raw ``IndexError`` (negative indices
+        would otherwise silently wrap)."""
+        if not isinstance(node_idx, (int, np.integer)):
+            raise ValueError(
+                f"node index must be an int, got {type(node_idx).__name__}")
+        if not 0 <= node_idx < self.num_nodes:
+            raise ValueError(
+                f"node index {node_idx} out of range for "
+                f"{self.num_nodes} nodes")
+        return self.nodes[int(node_idx)]
+
     def fail_replica(self, node_idx: int, replica_idx: int = 0):
         """Deterministic failure injection (tests / chaos drills)."""
-        node = self.nodes[node_idx]
+        node = self._check_node(node_idx)
+        if node.down:
+            raise ValueError(
+                f"node n{node_idx} is down (preempted); nothing to fail")
+        if not node.live:
+            raise ValueError(f"node n{node_idx} has no live replicas")
+        if not 0 <= replica_idx < len(node.live):
+            raise ValueError(
+                f"replica index {replica_idx} out of range: node "
+                f"n{node_idx} has {len(node.live)} live replicas")
         self._fail(node, node.live[replica_idx])
 
+    def preempt_node(self, node_idx: int, notice: Optional[int] = None):
+        """Spot-preemption notice on a whole node: every live replica
+        drains under the deadline, pending spawns are cancelled, no new
+        work routes there (``up_mask`` drops to 0 once nothing is live).
+        After ``notice`` ticks (default the frontend's ``preempt_notice``)
+        whatever is still in flight is hard-dropped: evacuated, re-queued
+        in arrival order, and the node goes ``down`` until
+        ``recover_node``. ``notice<=0`` preempts immediately."""
+        node = self._check_node(node_idx)
+        if node.down:
+            raise ValueError(f"node n{node_idx} is already down")
+        if node.preempt_left >= 0:
+            raise ValueError(
+                f"node n{node_idx} already has a preemption notice "
+                f"({node.preempt_left} ticks left)")
+        left = self.preempt_notice if notice is None else int(notice)
+        node.spawning = []            # a doomed node never finishes a spawn
+        for eng in list(node.live):   # drain-under-deadline
+            self._drain(node, eng)
+        if left <= 0:
+            self._preempt_finalize(node)
+        else:
+            node.preempt_left = left
+
+    def recover_node(self, node_idx: int):
+        """Bring a preempted node back into the schedulable pool (empty —
+        capacity returns when the autoscaler targets it again)."""
+        node = self._check_node(node_idx)
+        if not node.down:
+            raise ValueError(f"node n{node_idx} is not down")
+        node.down = False
+
+    def _preempt_finalize(self, node: _Node):
+        """Notice expired: hard-drop every replica still finishing work
+        (the failure path — reconcile-flush, evacuate, re-queue merged),
+        hand the node queue back for global re-routing, mark the node
+        down."""
+        for eng in list(node.draining):
+            self._destroy(node, eng, node.draining)
+            self.preempted_replicas += 1
+        for eng in list(node.live):      # defensive: nothing should be live
+            self._destroy(node, eng, node.live)
+            self.preempted_replicas += 1
+        if node.queue:
+            _requeue_merged(self.pending, node.queue)
+            node.queue.clear()
+        node.preempt_left = -1
+        node.down = True
+        self.preempted_nodes += 1
+
+    def _advance_chaos(self):
+        """Apply this tick's scripted chaos events, then advance preemption
+        notice timers (a node whose notice hits zero finalizes here, so
+        its evacuated work re-routes within the same tick)."""
+        if self.chaos is not None:
+            for kind, n, arg in self.chaos.pop(self.t):
+                if kind == "fail":
+                    self.fail_replica(n, 0 if arg is None else arg)
+                elif kind == "preempt":
+                    self.preempt_node(n, notice=arg)
+                else:
+                    self.recover_node(n)
+        for node in self.nodes:
+            if node.preempt_left < 0:
+                continue
+            if node.preempt_left == 0:
+                self._preempt_finalize(node)
+            else:
+                node.preempt_left -= 1
+
+    def preempt_risk(self) -> np.ndarray:
+        """Per-node preemption-risk signal for the GPSO planner: 1 while a
+        node is under notice or down, else 0. All zeros when no chaos is
+        active, which keeps the planner on its original Eq.9 objective
+        (bit-parity with the pre-chaos stack)."""
+        return np.asarray(
+            [1.0 if (n.down or n.preempt_left >= 0) else 0.0
+             for n in self.nodes], np.float32)
+
     def _fail(self, node: _Node, eng: ReplicaEngine):
+        self._destroy(node, eng, node.live)
+        self.failed_replicas += 1
+
+    def _destroy(self, node: _Node, eng: ReplicaEngine, pool: list):
         if eng._fleet is not None:
             # pending futures must commit BEFORE progress resets — a stale
             # token applied after evacuate() would corrupt the re-queued
@@ -420,13 +758,12 @@ class ElasticClusterFrontend:
         # arrival accounting, not by a blanket prepend that would jump any
         # newer lost request ahead of older queued ones)
         _requeue_merged(node.queue, lost)
-        node.live.remove(eng)
+        pool.remove(eng)
         node.credit.pop(id(eng), None)
         self._leave_fleet(eng, restore=False)   # row dropped, not unstacked
         self._retired_prefill_dispatches += eng.prefill_dispatches
         self._retired_syncs += eng.syncs
         self._retired_sync_wait += eng.sync_wait
-        self.failed_replicas += 1
 
     def _inject_failures(self):
         if self.failure_rate <= 0.0:
@@ -455,7 +792,34 @@ class ElasticClusterFrontend:
             req = self.request_factory(self._req_id, self.t)
             self._req_id += 1
             req.arrival = float(self.t - 1)   # arrives as this tick begins
+            self.ledger.register(req)         # fresh rid: always accepted
             self.pending.append(req)
+
+    def _cull_expired(self) -> list:
+        """Sweep ``pending`` and the node queues for requests whose
+        deadline has already passed — admitting them would waste routing
+        and a prefill on a request that could emit at most one truncated
+        token. (Replica-queue heads are culled by ``plan_admission``; a
+        deep replica queue is bounded by ``max_batch``.) Culled requests
+        are stamped finished-now so the ledger resolves them timed-out.
+        No-op when nothing carries a deadline (chaos-off parity)."""
+        expired: list = []
+
+        def cull(q):
+            dead = [r for r in q if r.out_of_time(self.t)]
+            if dead:
+                keep = [r for r in q if not r.out_of_time(self.t)]
+                q.clear()
+                for r in keep:
+                    q.append(r)
+            expired.extend(dead)
+
+        cull(self.pending)
+        for node in self.nodes:
+            cull(node.queue)
+        for r in expired:
+            r.finish_time = float(self.t)
+        return expired
 
     def _reroute_stranded(self):
         """A node with queued work but no live or provisioning replicas would
@@ -498,8 +862,10 @@ class ElasticClusterFrontend:
         # so admission timing matches the eager oracle exactly)
         finished_now: list = self._reconcile_all()
         self._advance_provisioning()
-        self._inject_failures()
+        self._advance_chaos()     # scripted events + notice timers: their
+        self._inject_failures()   # hand-backs re-route this same tick
         self._generate_arrivals(arrival_rate)
+        finished_now.extend(self._cull_expired())
         self._reroute_stranded()
         self._route_pending()
         self._tick_dispatches = 0
@@ -576,6 +942,16 @@ class ElasticClusterFrontend:
         finished_now.extend(self._async_stash)
         self._async_stash = []
         self.finished.extend(finished_now)
+        # conservation: land every completion in its terminal ledger state
+        # (goodput = in-deadline finishes for a client that still wants
+        # them; expired ones are timed_out; abandoned rids count wasted)
+        self._tick_goodput = self._tick_timed_out = 0
+        for r in finished_now:
+            end = self.ledger.resolve(r)
+            if end == "finished":
+                self._tick_goodput += 1
+            elif end == "timed_out":
+                self._tick_timed_out += 1
         self._m = self._compute_metrics(finished_now, arrival_rate)
         return self._m
 
@@ -671,11 +1047,14 @@ class ElasticClusterFrontend:
         served: dict = {n: 0 for n in tiers.names}
         viol: dict = {}
         for spec in tiers.specs:
-            done = [r for r in finished_now if tiers.index(r.tier)
+            rows = [r for r in finished_now if tiers.index(r.tier)
                     == tiers.index(spec.name)]
+            # queue-culled expired requests never got a first token: they
+            # are SLO misses, not latency samples
+            done = [r for r in rows if r.first_token_time is not None]
             served[spec.name] = len(done)
             late = overdue[spec.name]
-            misses = late
+            misses = late + (len(rows) - len(done))
             if done:
                 ft = [r.first_token_time - r.arrival for r in done]
                 bt = [(r.finish_time - r.first_token_time)
@@ -685,7 +1064,7 @@ class ElasticClusterFrontend:
                 misses += sum(float(f > spec.ttft_target
                                     or b > spec.tbt_target)
                               for f, b in zip(ft, bt))
-            denom = len(done) + late
+            denom = len(rows) + late
             if denom:
                 viol[spec.name] = misses / denom
         return {
@@ -747,6 +1126,11 @@ class ElasticClusterFrontend:
             "fleet_groups": int(sum(1 for g in self._fleets.values()
                                     if len(g))),
             "service_rate": self.service_rate,
+            # robustness view: all zeros when chaos/clients are off, so
+            # the planner (guarded by .any()) and reward see no change
+            "goodput": float(self._tick_goodput),
+            "timed_out": float(self._tick_timed_out),
+            "preempt_risk": self.preempt_risk(),
             **self._tier_metrics(finished_now),
         }
 
@@ -755,14 +1139,21 @@ class ElasticClusterFrontend:
         """Finish all outstanding work (controlled wind-down: chaos
         injection pauses so the backlog can actually clear)."""
         rate, self.failure_rate = self.failure_rate, 0.0
-        try:
+        chaos, self.chaos = self.chaos, None   # scripted events pause too;
+        try:                                   # notice timers still expire
             for _ in range(max_steps):
                 # safety: if scaling/failures left the whole cluster with no
                 # capacity while work is outstanding, spawn one drain worker
-                # (an aggressive scale-to-zero must never drop requests)
+                # (an aggressive scale-to-zero must never drop requests) —
+                # on a node that is neither preempted-down nor under notice
                 if (self.pending or any(n.unfinished() for n in self.nodes)) \
                         and not any(n.live or n.spawning for n in self.nodes):
-                    self._go_live(self.nodes[0])
+                    host = next((n for n in self.nodes
+                                 if not n.down and n.preempt_left < 0), None)
+                    if host is None:           # everything preempted away:
+                        host = self.nodes[0]   # force one node back up
+                        host.down = False
+                    self._go_live(host)
                 self.tick(0.0)
                 if not self.pending and all(n.unfinished() == 0
                                             for n in self.nodes):
@@ -770,3 +1161,4 @@ class ElasticClusterFrontend:
             raise RuntimeError("elastic cluster did not drain")
         finally:
             self.failure_rate = rate
+            self.chaos = chaos

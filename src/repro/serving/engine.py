@@ -613,6 +613,10 @@ class _AdmitPlans:
     recorded directly on the engine's cursor table."""
     bucketed: list          # [(slots, reqs)]
     singles: list           # [(slot, req)]
+    expired: list = dataclasses.field(default_factory=list)
+    # queue heads whose deadline already passed — popped without consuming
+    # a slot (admitting them would waste a prefill on a request that could
+    # emit at most one truncated token); retired directly into ``finished``
 
 
 class TieredQueue:
@@ -871,7 +875,7 @@ class FleetGroup:
         for s, req in enumerate(eng.slots):
             if req is not None and s not in eng._chunks:
                 act[s] = True
-                rem[s] = req.max_new_tokens - len(req.output)
+                rem[s] = req.rem_tokens(eng.clock)
                 eos[s] = req.eos_id
         vals = {"toks": np.asarray(eng.last_tok, np.int32),
                 "pos": np.asarray(eng.pos, np.int32),
@@ -923,7 +927,7 @@ class FleetGroup:
                 "toks": o["toks"].at[f, slot].set(int(req.output[-1])),
                 "pos": o["pos"].at[f, slot].set(int(prompt_len)),
                 "rem": o["rem"].at[f, slot].set(
-                    req.max_new_tokens - len(req.output)),
+                    req.rem_tokens(self.members[f].clock)),
                 "eos": o["eos"].at[f, slot].set(int(req.eos_id)),
                 "active": o["active"].at[f, slot].set(True),
             }
@@ -947,6 +951,7 @@ class FleetGroup:
         chunk_rows: list = []    # (engine, slot, toks, off, ln, fresh, final)
         for e in movers:
             plans = e.plan_admission()
+            finished.extend(plans.expired)
             for slot, req in plans.singles:
                 e._admit_batch([slot], [req], finished, bucketed=False)
             for slots, reqs in plans.bucketed:
@@ -979,7 +984,7 @@ class FleetGroup:
             toks[i, :len(p)] = p
             lens[i] = len(p)
             rows[i], slots[i] = e._fleet_row, slot
-            rems[i] = req.max_new_tokens - 1
+            rems[i] = req.rem_tokens(e.clock) - 1
             eoss[i] = req.eos_id
         if self.async_mode:
             first, self.slab, self.ops = self._kernels.afleet_prefill(
@@ -1023,7 +1028,7 @@ class FleetGroup:
                 for i, (e, slot, t, off, ln, fr, fin) in enumerate(items):
                     req = e._chunks[slot].req
                     final[i] = fin
-                    rems[i] = req.max_new_tokens - 1
+                    rems[i] = req.rem_tokens(e.clock) - 1
                     eoss[i] = req.eos_id
                 first, self.slab, self.ops = self._kernels.afleet_chunk(
                     self.params, self.slab, self.ops, jnp.asarray(toks),
@@ -1085,7 +1090,7 @@ class FleetGroup:
             for s, req in enumerate(e.slots):
                 if req is not None and s not in e._chunks:
                     active[f, s] = True
-                    rem[f, s] = req.max_new_tokens - len(req.output)
+                    rem[f, s] = req.rem_tokens(e.clock)
                     eos[f, s] = req.eos_id
         if held:                     # pow2-padded OOB -> dropped on scatter
             hk = pow2_bucket(len(held))
@@ -1241,7 +1246,8 @@ class FleetGroup:
             tok = int(first[i])
             req.output.append(tok)
             req.first_token_time = clock
-            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id \
+                    or req.out_of_time(clock):
                 req.finish_time = clock
                 finished.append(req)
                 e.slots[slot] = None
@@ -1274,6 +1280,14 @@ class Request:
     eos_id: int = -1               # -1: never stop early
     arrival: float = 0.0
     tier: str = "standard"         # SLO tier name (see workload.trace)
+    # deadline (absolute tick, None = no deadline): past it the request is
+    # worthless to its client — in-flight slots retire through the existing
+    # fleet/afleet ``rem <= 1`` rule (the host clamps the remaining-token
+    # budget, see ``rem_tokens``; no new kernels, no extra dispatches) and
+    # queued copies are culled at admission time. Deadlines are denominated
+    # in ticks and enforced at one decode step per tick; a speed>1 replica's
+    # extra sub-steps only ever retire it conservatively *earlier*.
+    deadline_tick: Optional[float] = None
     # filled by the engine
     output: list = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
@@ -1282,6 +1296,40 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_time is not None
+
+    @property
+    def expired(self) -> bool:
+        """Finished by deadline expiry rather than on its own terms: the
+        output was truncated — neither the token budget nor EOS ended it —
+        and only the deadline clamp / queue cull truncates. The finish
+        stamp can land *before* the deadline (a request admitted at tick t
+        also decodes at tick t, outrunning the 1-token/tick clamp budget),
+        so truncation, not ``finish_time``, is the signal. Never true
+        without a deadline, so deadline-free workloads classify exactly
+        as before."""
+        return (self.deadline_tick is not None
+                and self.finish_time is not None
+                and len(self.output) < self.max_new_tokens
+                and (not self.output or self.output[-1] != self.eos_id))
+
+    def rem_tokens(self, clock: float) -> int:
+        """Remaining-token budget at ``clock`` — the value the fleet/afleet
+        retire rule consumes as ``rem``. Without a deadline this is exactly
+        the historical ``max_new_tokens - len(output)``; with one, it is
+        additionally clamped so the slot retires (``rem <= 1``) no later
+        than the deadline tick. Both budgets decrement one per decode step,
+        so a value seeded once into the async device operands stays the
+        exact min at every later micro-step."""
+        rem = self.max_new_tokens - len(self.output)
+        if self.deadline_tick is not None:
+            rem = min(rem, int(self.deadline_tick - clock) + 1)
+        return rem
+
+    def out_of_time(self, clock: float) -> bool:
+        """Host twin of the deadline half of the device retire rule: at
+        ``clock >= deadline_tick`` the deadline-clamped ``rem`` is <= 1, so
+        the token appended at ``clock`` is the slot's last."""
+        return self.deadline_tick is not None and clock >= self.deadline_tick
 
     def reset_progress(self):
         """Forget generation progress (replica failure -> re-queue)."""
@@ -1449,7 +1497,8 @@ class ReplicaEngine:
             tok = int(first[i])
             req.output.append(tok)
             req.first_token_time = self.clock
-            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id \
+                    or req.out_of_time(self.clock):
                 req.finish_time = self.clock
                 finished.append(req)
                 continue
@@ -1465,7 +1514,8 @@ class ReplicaEngine:
             tok = int(first[i])
             req.output.append(tok)
             req.first_token_time = self.clock
-            if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+            if len(req.output) >= req.max_new_tokens or tok == req.eos_id \
+                    or req.out_of_time(self.clock):
                 req.finish_time = self.clock
                 finished.append(req)
                 continue
@@ -1501,6 +1551,11 @@ class ReplicaEngine:
             if picked is None:
                 break
             tier_idx, head = picked
+            if head.out_of_time(self.clock):
+                req = self.queue.pop(deferred)
+                req.finish_time = self.clock
+                plans.expired.append(req)
+                continue
             if self._chunkable(head):
                 if len(free) == 1 and self.queue.higher_waiting(tier_idx):
                     deferred.add(tier_idx)    # leave the slot for premium
@@ -1520,7 +1575,8 @@ class ReplicaEngine:
             while len(group) < len(free):
                 nxt = self.queue.peek(deferred)
                 if nxt is None or getattr(nxt[1], "extras", None) \
-                        or self._chunkable(nxt[1]):
+                        or self._chunkable(nxt[1]) \
+                        or nxt[1].out_of_time(self.clock):
                     break
                 group.append(self.queue.pop(deferred))
             plans.bucketed.append(([free.pop(0) for _ in group], group))
@@ -1530,6 +1586,7 @@ class ReplicaEngine:
         """Standalone admission: plan, then dispatch this engine's own
         bucketed / exact-length prefill calls."""
         plans = self.plan_admission()
+        finished.extend(plans.expired)
         for slot, req in plans.singles:
             self._admit_batch([slot], [req], finished, bucketed=False)
         for slots, reqs in plans.bucketed:
@@ -1589,7 +1646,8 @@ class ReplicaEngine:
         tok = int(first_tok)
         req.output.append(tok)
         req.first_token_time = self.clock
-        if len(req.output) >= req.max_new_tokens or tok == req.eos_id:
+        if len(req.output) >= req.max_new_tokens or tok == req.eos_id \
+                or req.out_of_time(self.clock):
             req.finish_time = self.clock
             finished.append(req)
             self.slots[slot] = None
@@ -1666,7 +1724,8 @@ class ReplicaEngine:
             self.pos[slot] += 1
             self.last_tok[slot] = tok
             if (len(req.output) >= req.max_new_tokens or tok == req.eos_id
-                    or self.pos[slot] >= self.max_seq - 1):
+                    or self.pos[slot] >= self.max_seq - 1
+                    or req.out_of_time(self.clock)):
                 req.finish_time = self.clock
                 finished.append(req)
                 self.slots[slot] = None

@@ -48,6 +48,7 @@ class ClusterState:
     slow: np.ndarray           # (N,) straggler capacity multiplier
     slow_left: np.ndarray      # (N,) ticks of degradation remaining
     retry_pool: float          # work dropped from failed nodes, re-enqueued
+    notice_left: np.ndarray    # (N,) spot-preemption notice ticks; -1 = none
 
 
 def init_state(n_nodes: int, replicas: int, delay: int) -> ClusterState:
@@ -60,6 +61,7 @@ def init_state(n_nodes: int, replicas: int, delay: int) -> ClusterState:
         slow=np.ones(n_nodes, np.float32),
         slow_left=np.zeros(n_nodes, np.int32),
         retry_pool=0.0,
+        notice_left=np.full(n_nodes, -1, np.int32),
     )
 
 
@@ -94,6 +96,12 @@ class ClusterSim:
 
     heterogeneous: bool = True
     tiers: Optional[TierSet] = None   # None -> untiered (single class)
+    # scripted chaos (duck-typed ``serving.elastic.ChaosSchedule``: any
+    # object with ``pop(tick) -> [(kind, node, arg)]``) and the default
+    # spot-preemption notice length — the fluid mirror of the elastic
+    # frontend's failure matrix
+    chaos: Optional[object] = None
+    preempt_notice: int = 0
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -118,6 +126,11 @@ class ClusterSim:
                 p=[0.25, 0.5, 0.25]).astype(np.float32)
         else:
             self.node_speed = np.ones(self.cfg.num_nodes, np.float32)
+        # preempted-away nodes: down until an explicit recover event (unlike
+        # ordinary failures, which self-repair after ~mttr and keep their
+        # replicas). Tracked separately so scale_to can refuse to provision
+        # onto them without changing the ordinary-failure dynamics.
+        self._preempt_down = np.zeros(self.cfg.num_nodes, bool)
 
     # ------------------------------------------------------------ dynamics
     def capacity(self) -> np.ndarray:
@@ -132,6 +145,11 @@ class ClusterSim:
         target = np.asarray(target, np.int32)
         in_flight = s.active + s.pending.sum(axis=1)
         add = np.maximum(target - in_flight, 0)
+        # never provision onto a node under a preemption notice or already
+        # preempted away (ordinary failed nodes still accept adds: they
+        # come back with their replicas after repair)
+        doomed = (s.notice_left >= 0) | self._preempt_down
+        add = np.where(doomed, 0, add)
         if add.any():
             s.pending[:, -1] += add
         down = np.maximum(in_flight - target, 0)
@@ -150,6 +168,87 @@ class ClusterSim:
         s.active = s.active + s.pending[:, 0]
         s.pending = np.roll(s.pending, -1, axis=1)
         s.pending[:, -1] = 0
+
+    # ------------------------------------------------------------- chaos
+    def _check_node(self, i: int):
+        if not isinstance(i, (int, np.integer)) \
+                or not 0 <= i < self.cfg.num_nodes:
+            raise ValueError(
+                f"node index {i!r} out of range for {self.cfg.num_nodes} "
+                "nodes")
+
+    def preempt_node(self, i: int, notice: Optional[int] = None):
+        """Spot-preemption notice on node ``i`` (the fluid mirror of
+        ``ElasticClusterFrontend.preempt_node``): spawns cancel now, the
+        node keeps draining its queue for the notice window, then whatever
+        backlog remains dumps into the retry pool and the node goes down
+        until an explicit ``recover_node``."""
+        self._check_node(i)
+        s = self.state
+        if s.up[i] < 0.5:
+            raise ValueError(f"node n{i} is already down")
+        if s.notice_left[i] >= 0:
+            raise ValueError(f"node n{i} already has a preemption notice")
+        left = self.preempt_notice if notice is None else int(notice)
+        s.pending[i, :] = 0
+        if left <= 0:
+            self._preempt_finalize(i)
+        else:
+            s.notice_left[i] = left
+
+    def recover_node(self, i: int):
+        self._check_node(i)
+        s = self.state
+        if not self._preempt_down[i]:
+            raise ValueError(f"node n{i} is not preempted away")
+        self._preempt_down[i] = False
+        s.up[i] = 1.0
+        s.down_left[i] = 0
+
+    def _preempt_finalize(self, i: int):
+        s = self.state
+        s.retry_pool += float(s.queue[i])
+        s.queue[i] = 0.0
+        if self.tier_queue is not None:
+            self.tier_queue[:, i] = 0.0
+        s.active[i] = 0
+        s.pending[i, :] = 0
+        s.up[i] = 0.0
+        s.down_left[i] = 2**30       # no self-repair: recovery is scripted
+        s.notice_left[i] = -1
+        self._preempt_down[i] = True
+
+    def _advance_chaos(self):
+        if self.chaos is not None:
+            for kind, i, arg in self.chaos.pop(self.tick_count + 1):
+                if kind == "preempt":
+                    self.preempt_node(i, notice=arg)
+                elif kind == "recover":
+                    self.recover_node(i)
+                else:                 # "fail": whole node, ordinary repair
+                    self._check_node(i)
+                    s = self.state
+                    if s.up[i] < 0.5:
+                        raise ValueError(f"node n{i} is already down")
+                    s.up[i] = 0.0
+                    s.down_left[i] = self.rng.geometric(
+                        1.0 / self.cfg.node_mttr)
+                    s.retry_pool += float(s.queue[i])
+                    s.queue[i] = 0.0
+                    if self.tier_queue is not None:
+                        self.tier_queue[:, i] = 0.0
+        s = self.state
+        for i in np.nonzero(s.notice_left >= 0)[0]:
+            if s.notice_left[i] == 0:
+                self._preempt_finalize(i)
+            else:
+                s.notice_left[i] -= 1
+
+    def preempt_risk(self) -> np.ndarray:
+        """Per-node spot-churn signal for the planner: 1 under notice or
+        preempted away, else 0 (all zeros when chaos never fired)."""
+        s = self.state
+        return ((s.notice_left >= 0) | self._preempt_down).astype(np.float32)
 
     def _advance_failures(self):
         if not self.failures:
@@ -191,6 +290,7 @@ class ClusterSim:
         """One dt step. fractions: (N,) simplex allocation from a balancer."""
         cfg = self.cfg
         self._advance_provisioning()
+        self._advance_chaos()
         self._advance_failures()
         s = self.state
         arrivals = float(arrivals) + s.retry_pool / max(cfg.tick_seconds, 1e-9)

@@ -1,3 +1,4 @@
+from repro.workload.clients import ClientPool  # noqa: F401
 from repro.workload.trace import (  # noqa: F401
     DEFAULT_TIERS, LOAD_LEVELS, TierSet, TierSpec, TraceConfig,
     generate_trace, make_forecast_dataset, parse_tiers,
