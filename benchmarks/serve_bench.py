@@ -47,7 +47,15 @@ Phases over real CPU forwards:
     at 50 users/tick. Each cell reports goodput fraction, SLO attainment,
     retries/abandons, the per-tick goodput curve and the request-
     conservation ledger (must balance: every rid exactly-once terminal,
-    ``double_served == 0`` — asserted, not just recorded).
+    ``double_served == 0`` — asserted, not just recorded). The matrix also
+    drives the PR 8 multi-cell routing plane (2 elastic cells behind
+    ``MultiCellBackend`` + ``CellRouter``, one GLOBAL ledger): a cell
+    blackout routed vs a health-blind static split (routed goodput must be
+    strictly higher), a control-plane partition (staleness decay +
+    quarantine), tier-aware overload shedding, and the flash-crowd-1000
+    re-run through the router with shedding armed — premium-tier goodput
+    must beat the unrouted aggregate collapse, with every shed an explicit
+    ledger terminal.
 
 Tick-wall stats separate *steady-state* ticks from ticks that hit an XLA
 compile (``serve_kernel_traces`` delta > 0): a single ~1s retrace inside a
@@ -755,12 +763,120 @@ def _run_matrix_cell(model, params, cfg, *, clients, ticks, timeout,
     }
 
 
+MC_TIERS = "premium:0.3:w5:4,batch:0.7:w1"
+
+
+def _run_multicell_cell(model, params, cfg, *, clients, ticks, timeout,
+                        retries, cell_chaos=None, adaptive=True,
+                        tiers_spec="", shed_threshold=None,
+                        spawn_rate=None, think=1.5, seed=0) -> dict:
+    """One failure-matrix cell through the multi-cell routing plane: 2
+    elastic cells behind ``MultiCellBackend``, closed-loop clients on the
+    router facade, one GLOBAL ledger. ``adaptive=False`` is the A/B arm:
+    a fixed uniform split that keeps routing into dead/stale cells."""
+    from repro.control import CellRouter, MultiCellBackend
+    from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
+                               ReplicaEngine, Request)
+    from repro.workload import ClientPool, parse_tiers
+
+    tiers = parse_tiers(tiers_spec)
+    rng = np.random.default_rng(seed)
+
+    def mk(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid, tiers=tiers)
+
+    def rf(rid, tick):
+        plen = int(rng.integers(2, 10))
+        req = Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                      max_new_tokens=4)
+        if len(tiers) > 1:
+            # deterministic tier per rid: a retry re-issues in the SAME
+            # tier, so per-tier ledger rows attribute whole rids
+            req.tier = tiers.names[0] if rid % 10 < 3 else tiers.names[-1]
+        return req
+
+    def cell(seed_):
+        return ElasticClusterFrontend(
+            mk, NODES, initial_replicas=2, max_replicas_per_node=2,
+            provisioning_delay=2, seed=seed_, est_tokens=4,
+            preempt_notice=3, tiers=tiers)
+
+    router = CellRouter(2, tiers=tiers, shed_threshold=shed_threshold,
+                        adaptive=adaptive)
+    mc = MultiCellBackend(
+        [cell(seed), cell(seed + 100)], tiers=tiers, router=router,
+        chaos=ChaosSchedule.parse(cell_chaos) if cell_chaos else None,
+        seed=seed)
+    pool = ClientPool(mc, clients, request_factory=rf, think_time=think,
+                      timeout=timeout, max_retries=retries,
+                      spawn_rate=spawn_rate, seed=seed + 1)
+    curve = []
+    for _ in range(ticks):
+        pool.tick()
+        m = mc.tick(0.0)
+        curve.append(int(m["goodput"]))
+    pool.quiesce()
+    mc.run_until_drained()
+    pool.finalize()
+    led, s = mc.ledger, pool.summary()
+    states = led.balance()
+    total = max(led.submitted, 1)
+    row = {
+        "cells": 2, "clients": clients, "ticks": ticks,
+        "cell_chaos": cell_chaos or "", "adaptive_routing": adaptive,
+        "spawn_rate": spawn_rate, "tiers": tiers_spec,
+        "shed_threshold": shed_threshold,
+        "submitted": led.submitted,
+        "finished": states["finished"], "timed_out": states["timed_out"],
+        "abandoned": states["abandoned"], "rejected": states["rejected"],
+        "shed": states["shed"],
+        "retries": led.retries, "duplicates": led.duplicates,
+        "wasted": led.wasted, "double_served": led.double_served,
+        "goodput_frac": round(states["finished"] / total, 3),
+        "slo_attainment": round(s["ok"] / max(s["ok"] + s["abandoned"], 1),
+                                3),
+        "client_e2e_p95_ticks": s["latency_p95"],
+        "shed_total": mc.shed_total,
+        "evacuated": mc.evacuated_total, "cell_downs": mc.cell_downs,
+        "quarantine_ticks": mc.quarantine_ticks,
+        "ledger_balanced": led.balanced(),
+        "goodput_curve": curve,
+    }
+    if len(tiers) > 1:
+        per = {}
+        for name in tiers.names:
+            r_ = led.per_tier.get(name)
+            if r_ is None:
+                continue
+            tot = max(r_["finished"] + r_["timed_out"] + r_["abandoned"]
+                      + r_["rejected"] + r_["shed"], 1)
+            per[name] = {
+                "goodput_frac": round(r_["finished"] / tot, 3),
+                **{k: r_[k] for k in ("finished", "timed_out", "abandoned",
+                                      "rejected", "shed", "retries")},
+            }
+            cl = s["per_tier"].get(name)
+            if cl:
+                per[name]["slo_attainment"] = round(
+                    cl["ok"] / max(cl["ok"] + cl["abandoned"], 1), 3)
+        row["per_tier"] = per
+    return row
+
+
 def bench_failure_matrix(model, params, cfg) -> dict:
-    """Closed-loop clients through the chaos cells (see MATRIX_CELLS).
+    """Closed-loop clients through the chaos cells (see MATRIX_CELLS) plus
+    the multi-cell routing-plane cells (PR 8): cell blackout routed vs a
+    static uniform split, a control-plane partition, total-overload
+    shedding, and the flash-crowd-1000 re-run through the router with
+    tier-aware shedding armed.
 
     Conservation is asserted per cell: an unbalanced ledger or a
     double-served rid fails the bench outright — a goodput number over
-    lost/duplicated requests is not a goodput number."""
+    lost/duplicated requests is not a goodput number. The multi-cell
+    contracts are asserted too: routed goodput strictly above the static
+    split under a blackout, and premium flash-crowd goodput above the
+    PR 7 aggregate collapse with every shed an explicit ledger terminal."""
     out = {}
     for name, kw in MATRIX_CELLS.items():
         cell = _run_matrix_cell(model, params, cfg, **kw)
@@ -773,6 +889,52 @@ def bench_failure_matrix(model, params, cfg) -> dict:
     out["goodput_drop_retry_storm"] = round(
         out["chaos_off"]["goodput_frac"]
         - out["retry_storm"]["goodput_frac"], 3)
+
+    # ---- multi-cell cells (2 elastic cells behind the routing plane) ----
+    # moderate load: the surviving cell must have headroom to absorb the
+    # re-routed traffic for routing to pay off. Under total overload the
+    # healthy cell saturates either way and a deeper queue only admits
+    # requests closer to expiry — that regime belongs to the shedding
+    # cells below, not this A/B. Tight deadlines + one retry make the
+    # static split PAY for spraying into the dark cell.
+    blackout = dict(clients=16, ticks=32, timeout=6.0, retries=1,
+                    think=2.0, cell_chaos="cell_down@8:c0,cell_up@24:c0")
+    mc_cells = {
+        "cell_blackout": dict(blackout),
+        "cell_blackout_static_split": dict(blackout, adaptive=False),
+        "stale_partition": dict(clients=48, ticks=32, timeout=10.0,
+                                retries=2,
+                                cell_chaos="partition@8:c0:k12"),
+        "overload_shed": dict(clients=96, ticks=32, timeout=8.0, retries=1,
+                              think=0.5, tiers_spec=MC_TIERS,
+                              shed_threshold=3.0),
+        "flash_crowd_1000_routed": dict(clients=1000, ticks=40,
+                                        timeout=6.0, retries=1,
+                                        spawn_rate=50.0, think=4.0,
+                                        tiers_spec=MC_TIERS,
+                                        shed_threshold=3.0),
+    }
+    for name, kw in mc_cells.items():
+        cell = _run_multicell_cell(model, params, cfg, **kw)
+        assert cell["ledger_balanced"], f"{name}: global ledger unbalanced"
+        assert cell["double_served"] == 0, \
+            f"{name}: rid served twice across cells"
+        out[name] = cell
+    # the routing plane must BEAT a health-blind uniform split when a cell
+    # goes dark (this is the point of the router — asserted, not hoped)
+    out["routed_vs_static_goodput_gain"] = round(
+        out["cell_blackout"]["goodput_frac"]
+        - out["cell_blackout_static_split"]["goodput_frac"], 3)
+    assert (out["cell_blackout"]["goodput_frac"]
+            > out["cell_blackout_static_split"]["goodput_frac"]), \
+        "adaptive routing did not beat the static split under blackout"
+    # tier-aware shedding must rescue the premium tier from the PR 7
+    # flash-crowd collapse (aggregate goodput was ~1.3% with no shedding)
+    fc = out["flash_crowd_1000_routed"]
+    assert fc["shed_total"] > 0, "flash crowd never tripped the shed"
+    assert (fc["per_tier"]["premium"]["goodput_frac"]
+            > out["flash_crowd_1000"]["goodput_frac"]), \
+        "shedding failed to lift premium goodput above the collapse"
     return {"failure_matrix": out}
 
 
@@ -898,6 +1060,18 @@ def main() -> list:
          f"{blob['failure_matrix']['flash_crowd_1000']['retries']} retries,"
          f" {blob['failure_matrix']['flash_crowd_1000']['abandoned']}"
          " abandoned"),
+        ("serve/goodput_cell_blackout_routed",
+         blob["failure_matrix"]["cell_blackout"]["goodput_frac"] * 1e6,
+         f"static split "
+         f"{blob['failure_matrix']['cell_blackout_static_split']['goodput_frac']}, "
+         f"gain {blob['failure_matrix']['routed_vs_static_goodput_gain']}"),
+        ("serve/goodput_flash_crowd_premium_routed",
+         blob["failure_matrix"]["flash_crowd_1000_routed"]["per_tier"][
+             "premium"]["goodput_frac"] * 1e6,
+         f"{blob['failure_matrix']['flash_crowd_1000_routed']['shed_total']}"
+         f" shed, vs "
+         f"{blob['failure_matrix']['flash_crowd_1000']['goodput_frac']}"
+         " aggregate unrouted"),
     ]
 
 

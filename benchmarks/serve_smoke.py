@@ -21,6 +21,12 @@ Guards the admission-path invariants cheap enough for every PR:
     (``metrics()['syncs'] <= 1``, admissions included) and produce token
     streams bit-identical to the eager oracle; with ``decode_block=4`` the
     fused windows must engage (total syncs / ticks < 1);
+  * **multi-cell chaos drill** — 2 elastic cells behind the fault-tolerant
+    routing plane (``control.cells``) with a scripted ``cell_down`` under
+    retrying clients: the single global ledger must balance with
+    ``double_served == 0`` across the evacuation + re-route, and each cell
+    must keep <= 1 sync and <= 1 decode dispatch per group per tick
+    (churn-flush ticks excepted, same accounting as the chaos drill);
   * **sharded fleet parity** — a child process with 4 virtual devices
     (``xla_force_host_platform_device_count=4``; the flag must precede
     jax's backend init, hence the subprocess) runs the same workload
@@ -263,6 +269,69 @@ def main():
         "chaos broke the one-sync-per-group bound on a churn-free tick"
     assert max_disp_c <= 1.0, \
         "chaos broke the one-decode-dispatch-per-group bound"
+
+    # ---- multi-cell chaos drill: cell blackout under the router -------
+    # 2 elastic cells behind the routing plane, a scripted blackout while
+    # retrying clients keep pressure on: the ONE global ledger must stay
+    # balanced with nothing double-served across the evacuation + re-route,
+    # and every cell must keep the per-tick sync/dispatch bounds (the
+    # router adds zero device work of its own)
+    from repro.control import MultiCellBackend
+
+    def mc_cell(seed):
+        return ElasticClusterFrontend(
+            mk_chaosrep, 2, initial_replicas=1, max_replicas_per_node=2,
+            provisioning_delay=2, seed=seed)
+
+    mc = MultiCellBackend(
+        [mc_cell(0), mc_cell(1)],
+        chaos=ChaosSchedule.parse("cell_down@6:c0,cell_up@14:c0"), seed=0)
+    pool_mc = ClientPool(mc, 12, request_factory=cf, think_time=1.0,
+                         timeout=8.0, max_retries=2, seed=2)
+    mc_churn = mc_steady = 0
+    max_disp_mc = 0.0
+    for _ in range(22):
+        before = [sum(len(n.live) + len(n.draining) for n in cell.nodes)
+                  for cell in mc.cells]
+        pool_mc.tick()
+        mc.tick(0.0)
+        for cell, n_before in zip(mc.cells, before):
+            m = cell.metrics()
+            if not m:
+                continue
+            n_after = sum(len(n.live) + len(n.draining)
+                          for n in cell.nodes)
+            over = m["syncs"] - max(m["fleet_groups"], 1)
+            if over > 0:
+                if n_after != n_before:
+                    mc_churn += 1      # churn flush: blackout/restore tick
+                else:
+                    mc_steady += 1
+            if m["decode_dispatches"]:
+                max_disp_mc = max(max_disp_mc, m["decode_dispatches"]
+                                  / max(m["fleet_groups"], 1))
+    pool_mc.quiesce()
+    mc.run_until_drained()
+    pool_mc.finalize()
+    led_mc = mc.ledger
+    s_mc = pool_mc.summary()
+    print(f"[smoke] multi-cell drill: cell_downs={mc.cell_downs} "
+          f"evacuated={mc.evacuated_total} submitted={led_mc.submitted} "
+          f"ok={s_mc['ok']} retries={s_mc['retries']} "
+          f"double_served={led_mc.double_served} "
+          f"(churn flush ticks={mc_churn}) "
+          f"max decode_dispatches/group/cell={max_disp_mc:.1f}")
+    assert mc.cell_downs == 1, "scripted cell blackout did not fire"
+    assert mc.evacuated_total > 0, "blackout caught no in-flight work"
+    assert led_mc.balanced(), \
+        f"global ledger unbalanced across cells: {led_mc.balance()}"
+    assert led_mc.double_served == 0, \
+        "a request was served twice across cells"
+    assert s_mc["ok"] > 0, "no goodput through the multi-cell drill"
+    assert mc_steady == 0, \
+        "a cell broke the one-sync-per-group bound on a churn-free tick"
+    assert max_disp_mc <= 1.0, \
+        "a cell broke the one-decode-dispatch-per-group bound"
 
     # ---- sharded fleet parity (child process: 4 virtual devices) ------
     env = dict(os.environ, SMOKE_SHARD_CHILD="1",

@@ -2,6 +2,9 @@
 any ``ClusterBackend`` — the fluid ``ClusterSim`` and the request-level
 ``ElasticClusterFrontend`` alike."""
 from repro.control.backend import ClusterBackend, SimBackend  # noqa: F401
+from repro.control.cells import (  # noqa: F401
+    CellRouter, MetricsView, MultiCellBackend,
+)
 from repro.control.plane import (  # noqa: F401
     METHOD_SPECS, ControlPlane, make_autoscaler,
 )

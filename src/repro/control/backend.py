@@ -47,9 +47,32 @@ When chaos/deadlines are off these are identically zero and the planner's
 ``.any()`` guard keeps the base objective — untouched workloads see
 bit-identical streams and plans. Exactly-once accounting (the
 ``RequestLedger``: every rid ends in exactly one of finished / timed-out /
-abandoned / rejected, never served twice) lives on the elastic frontend as
-``fe.ledger``; the fluid backend conserves work in aggregate via its
-``retry_pool`` instead.
+abandoned / rejected / shed, never served twice) lives on the elastic
+frontend as ``fe.ledger``; the fluid backend conserves work in aggregate
+via its ``retry_pool`` instead.
+
+**Multi-cell metrics (always on, PR 8).** A third implementation,
+``repro.control.cells.MultiCellBackend``, federates N backends as *cells*
+(``num_nodes`` = cell count) behind this same protocol. So that planner
+guards stay shape-stable across all three, every backend's metrics dict
+carries the degraded-mode keys:
+
+  * ``cell_staleness`` — (C,) float: ticks since each cell's metrics feed
+    last delivered (a control-plane partition ages it; past the router's
+    ``max_staleness`` the cell is hard-quarantined);
+  * ``cell_risk`` — (C,) float in [0, 1]: per-cell aggregate of the
+    per-node ``preempt_risk`` — the router biases traffic away from
+    doomed cells *before* a blackout lands;
+  * ``shed`` — scalar: requests admission-shed this tick under total
+    overload (lowest tiers first, each an explicit retryable ``shed``
+    ledger terminal — bounded queues, never silent loss).
+
+Single-cell backends (the two above) emit these as identical zeros —
+``cell_staleness``/``cell_risk`` as ``np.zeros(1)``, ``shed`` as ``0.0``
+— one frontend *is* one healthy, always-fresh cell; only the routing
+plane produces nonzero values. The multi-cell backend additionally
+reports ``shed_total``, ``router_weights`` (C,), ``router_pending``
+(parked arrivals when no cell is routable) and ``quarantined`` (C,).
 """
 from __future__ import annotations
 

@@ -45,6 +45,15 @@ per tick, trading up to K-1 ticks of admission lag under a full slab);
 ``--attn-backend pallas`` decodes attention through the flash-decode
 kernel (interpret mode off-TPU) instead of the dense einsum.
 
+Multi-cell flags: ``--cells N`` federates N elastic cells behind the
+fault-tolerant routing plane (``control.cells.MultiCellBackend``) — the
+same control plane drives the federation with cells as its "nodes";
+``--cell-chaos 'cell_down@15:c0,partition@10:c1:k6,cell_up@30:c0'``
+scripts blackouts and control-plane partitions (node-level ``--chaos``
+lands on cell 0); ``--shed-threshold X`` arms total-overload admission
+shedding (lowest tiers first, explicit ``shed`` ledger terminal);
+``--static-split`` is the A/B arm that routes a fixed uniform split.
+
 Device scaling: ``--devices N`` shards every fleet group's slab over an
 N-way ``('fleet',)`` mesh so F replicas decode on N devices in parallel
 (same one-logical-dispatch / one-sync tick; bit-identical streams). On a
@@ -84,7 +93,7 @@ def _parse_timeout(spec: str):
 
 def run_control_loop(args, cfg, model, params, mesh=None):
     from repro.configs.paper_cluster import ClusterConfig
-    from repro.control import ControlPlane
+    from repro.control import CellRouter, ControlPlane, MultiCellBackend
     from repro.core import balancer as bal
     from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
                                ReplicaEngine, Request)
@@ -92,10 +101,16 @@ def run_control_loop(args, cfg, model, params, mesh=None):
                                 parse_tiers)
 
     tiers = parse_tiers(args.tiers)
+    multi = args.cells > 1
+    # multi-cell: the plane sees CELLS as nodes; a scale target is the
+    # cell's total replica budget, so the per-"node" cap scales with the
+    # cell's own node count
     ccfg = ClusterConfig(
-        num_nodes=args.nodes, horizon=8, forecast_window=16,
+        num_nodes=args.cells if multi else args.nodes,
+        horizon=8, forecast_window=16,
         provisioning_delay=args.provision_delay,
-        max_replicas_per_node=args.max_replicas,
+        max_replicas_per_node=(args.nodes * args.max_replicas
+                               if multi else args.max_replicas),
         min_replicas_per_node=1,      # never plan a node to zero capacity
         scale_interval=5, cooldown=8, straggler_prob=0.0, node_mtbf=1e12)
     rng = np.random.default_rng(args.seed)
@@ -119,17 +134,36 @@ def run_control_loop(args, cfg, model, params, mesh=None):
 
     est_tokens = 8.0
     chaos = ChaosSchedule.parse(args.chaos) if args.chaos else None
-    fe = ElasticClusterFrontend(
-        make_replica, args.nodes, initial_replicas=args.replicas,
-        provisioning_delay=args.provision_delay,
-        max_replicas_per_node=args.max_replicas,
-        failure_rate=args.failure_rate, request_factory=request_factory,
-        seed=args.seed, est_tokens=est_tokens,
-        fleet_batch=not args.no_fleet,
-        fleet_prefill=not args.no_fleet_prefill,
-        async_tick=not args.no_async, decode_block=args.decode_block,
-        tiers=tiers, mesh=mesh,
-        preempt_notice=args.preempt_notice, chaos=chaos)
+
+    def build_cell(cell_chaos):
+        return ElasticClusterFrontend(
+            make_replica, args.nodes, initial_replicas=args.replicas,
+            provisioning_delay=args.provision_delay,
+            max_replicas_per_node=args.max_replicas,
+            failure_rate=args.failure_rate, request_factory=request_factory,
+            seed=args.seed, est_tokens=est_tokens,
+            fleet_batch=not args.no_fleet,
+            fleet_prefill=not args.no_fleet_prefill,
+            async_tick=not args.no_async, decode_block=args.decode_block,
+            tiers=tiers, mesh=mesh,
+            preempt_notice=args.preempt_notice, chaos=cell_chaos)
+
+    if multi:
+        # node-level --chaos lands on cell 0 (the scripted victim); cell
+        # events drive the router
+        cell_chaos = ChaosSchedule.parse(args.cell_chaos) \
+            if args.cell_chaos else None
+        router = CellRouter(
+            args.cells, tiers=tiers,
+            shed_threshold=args.shed_threshold or None,
+            adaptive=not args.static_split)
+        fe = MultiCellBackend(
+            [build_cell(chaos if c == 0 else None)
+             for c in range(args.cells)],
+            tiers=tiers, router=router, chaos=cell_chaos,
+            request_factory=request_factory, seed=args.seed)
+    else:
+        fe = build_cell(chaos)
     pool = None
     if args.clients > 0:
         # closed loop: the pool replaces the open-loop arrival trace (the
@@ -160,8 +194,11 @@ def run_control_loop(args, cfg, model, params, mesh=None):
     print(f"[serve] unified loop: balancer={balancer} "
           f"autoscale={args.autoscale} nodes={args.nodes} "
           f"ticks={args.ticks}"
+          + (f" cells={args.cells}" if multi else "")
           + (f" clients={args.clients}" if pool else "")
-          + (f" chaos={args.chaos!r}" if chaos else ""))
+          + (f" chaos={args.chaos!r}" if chaos else "")
+          + (f" cell-chaos={args.cell_chaos!r}"
+             if multi and args.cell_chaos else ""))
     t0 = time.time()
     for t in range(args.ticks):
         if pool is not None:
@@ -221,6 +258,7 @@ def run_control_loop(args, cfg, model, params, mesh=None):
     print(f"[serve] ledger: submitted={led.submitted} "
           f"finished={states['finished']} timed_out={states['timed_out']} "
           f"abandoned={states['abandoned']} rejected={states['rejected']} "
+          f"shed={states['shed']} "
           f"retries={led.retries} duplicates={led.duplicates} "
           f"wasted={led.wasted} double_served={led.double_served} "
           f"balanced={led.balanced()}")
@@ -231,10 +269,19 @@ def run_control_loop(args, cfg, model, params, mesh=None):
               f"goodput={row['finished']}/{total} "
               f"({row['finished'] / total:.0%}) "
               f"timed_out={row['timed_out']} abandoned={row['abandoned']} "
-              f"rejected={row['rejected']} retries={row['retries']}")
+              f"rejected={row['rejected']} shed={row['shed']} "
+              f"retries={row['retries']}")
     if fe.preempted_nodes or fe.preempted_replicas:
         print(f"[serve] preemptions: nodes={fe.preempted_nodes} "
               f"replicas={fe.preempted_replicas}")
+    if multi:
+        # degraded-mode report: what the routing plane absorbed
+        stale = fe.cell_staleness().astype(int).tolist()
+        print(f"[serve] cells: downs={fe.cell_downs} "
+              f"evacuated={fe.evacuated_total} shed={fe.shed_total} "
+              f"quarantine-ticks={fe.quarantine_ticks} "
+              f"parked={len(fe.pending)} staleness={stale} "
+              f"weights={np.round(fe._weights, 3).tolist()}")
     if pool is not None:
         s = pool.summary()
         lm = s["latency_mean"]
@@ -242,7 +289,7 @@ def run_control_loop(args, cfg, model, params, mesh=None):
         print(f"[serve] clients: n={s['clients']} issued={s['issued']} "
               f"ok={s['ok']} timed_out={s['timed_out']} "
               f"retries={s['retries']} abandoned={s['abandoned']} "
-              f"rejected={s['rejected']}"
+              f"rejected={s['rejected']} shed={s['shed']}"
               + (f" e2e mean={lm:.1f}t p95={lp:.1f}t"
                  if lm is not None else ""))
         for tname, row in sorted(s["per_tier"].items()):
@@ -340,7 +387,25 @@ def main():
                          "rows are dropped (spot semantics)")
     ap.add_argument("--chaos", default="",
                     help="deterministic fault script, e.g. "
-                         "'preempt@12:n0:k3,fail@8:n1:r0,recover@40:n0'")
+                         "'preempt@12:n0:k3,fail@8:n1:r0,recover@40:n0' "
+                         "(multi-cell: node events land on cell 0)")
+    ap.add_argument("--cells", type=int, default=1,
+                    help="federate N elastic cells behind the multi-cell "
+                         "routing plane (control mode; 1 = single cell, "
+                         "bit-identical to the direct frontend)")
+    ap.add_argument("--cell-chaos", default="",
+                    help="cell-level fault script for the routing plane, "
+                         "e.g. 'cell_down@15:c0,partition@10:c1:k6,"
+                         "cell_up@30:c0'")
+    ap.add_argument("--shed-threshold", type=float, default=0.0,
+                    help="total-overload admission shedding: when every "
+                         "healthy cell's tier pressure per unit capacity "
+                         "exceeds this, shed lowest tiers first (0 = off; "
+                         "multi-cell + tiers only)")
+    ap.add_argument("--static-split", action="store_true",
+                    help="disable adaptive cell routing (fixed uniform "
+                         "split ignoring health/staleness/risk; the "
+                         "multi-cell A/B baseline)")
     ap.add_argument("--no-fleet", action="store_true",
                     help="disable fleet-batched decode (per-replica jit "
                          "dispatch loop; A/B baseline)")

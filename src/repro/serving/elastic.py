@@ -156,8 +156,8 @@ def _requeue_merged(queue, reqs) -> None:
         queue.append(r)
 
 
-_TERMINAL_STATES = ("finished", "timed_out", "abandoned", "rejected")
-_RETRYABLE_STATES = ("timed_out", "rejected")
+_TERMINAL_STATES = ("finished", "timed_out", "abandoned", "rejected", "shed")
+_RETRYABLE_STATES = ("timed_out", "rejected", "shed")
 
 
 class RequestLedger:
@@ -165,9 +165,9 @@ class RequestLedger:
 
     Every rid is a state machine: ``live`` while an attempt is in the
     system, then exactly one of ``finished`` / ``timed_out`` /
-    ``abandoned`` / ``rejected``. Retries (same rid, fresh ``Request``
-    object) are accepted only from the retryable terminal states
-    (``timed_out``, ``rejected``); a re-submit racing a live attempt or a
+    ``abandoned`` / ``rejected`` / ``shed``. Retries (same rid, fresh
+    ``Request`` object) are accepted only from the retryable terminal states
+    (``timed_out``, ``rejected``, ``shed``); a re-submit racing a live attempt or a
     completed/abandoned rid is *suppressed* — that single rule guarantees
     at most one attempt per rid is ever in flight, so no queue surgery is
     needed for duplicate suppression. A completion that arrives for an
@@ -190,7 +190,7 @@ class RequestLedger:
     def tier_row(self, tier: str) -> dict:
         return self._per_tier.setdefault(
             tier, {"finished": 0, "timed_out": 0, "abandoned": 0,
-                   "rejected": 0, "retries": 0})
+                   "rejected": 0, "shed": 0, "retries": 0})
 
     @property
     def per_tier(self) -> dict:
@@ -218,6 +218,15 @@ class RequestLedger:
         """Admission control turned the (just-registered) attempt away."""
         self.state[req.rid] = "rejected"
         self.tier_row(self.tier[req.rid])["rejected"] += 1
+
+    def shed(self, req: Request) -> None:
+        """Overload shedding turned the attempt away: under total overload
+        the router degrades gracefully by refusing lowest-tier traffic at
+        admission instead of letting every queue grow without bound. An
+        explicit terminal state — never silent loss — and retryable, so a
+        backing-off client may come back once pressure clears."""
+        self.state[req.rid] = "shed"
+        self.tier_row(self.tier[req.rid])["shed"] += 1
 
     def abandon(self, rid: int) -> bool:
         """The client gave up on ``rid``. Legal from ``live`` (the attempt
@@ -273,26 +282,38 @@ class RequestLedger:
 
 class ChaosSchedule:
     """Deterministic scripted chaos: fail / preempt / recover events keyed
-    by tick. Spec syntax (comma-separated)::
+    by tick, plus cell-level events for the multi-cell routing plane
+    (``control.cells.MultiCellBackend``). Spec syntax (comma-separated)::
 
         preempt@12:n0:k3   # tick 12: preemption notice on node 0, K=3
         preempt@20:n1      # frontend-default notice
         fail@8:n1:r0       # tick 8: kill node 1's live replica 0
         fail@9:n0          # replica 0 by default
         recover@40:n0      # tick 40: bring node 0 back from 'down'
+        cell_down@15:c0    # tick 15: blackout cell 0 (evacuate + re-route)
+        cell_up@30:c0      # tick 30: restore cell 0 (provisioning applies)
+        partition@10:c1:k6 # tick 10: cell 1's metrics feed stale for 6 ticks
+        heal@14:c1         # end cell 1's partition early
 
-    Events validate at parse time (syntax) and again when applied (node /
-    replica indices and liveness — see ``fail_replica`` & friends)."""
+    Node-kind events are consumed by the backends' own ``_advance_chaos``
+    (elastic frontend / fluid sim); cell-kind events are consumed by the
+    routing plane. ``pop`` is non-destructive, so one schedule can feed
+    both consumers — each filters to the kinds it owns. Events validate at
+    parse time (syntax) and again when applied (indices and liveness)."""
+
+    NODE_KINDS = ("preempt", "fail", "recover")
+    CELL_KINDS = ("cell_down", "cell_up", "partition", "heal")
 
     _EVENT = re.compile(
-        r"^(?P<kind>preempt|fail|recover)@(?P<tick>\d+):n(?P<node>\d+)"
+        r"^(?P<kind>preempt|fail|recover|cell_down|cell_up|partition|heal)"
+        r"@(?P<tick>\d+):(?P<scope>[nc])(?P<idx>\d+)"
         r"(?::(?P<argkind>[kr])(?P<arg>\d+))?$")
 
     def __init__(self):
-        self.events: dict = {}       # tick -> [(kind, node, arg|None)]
+        self.events: dict = {}       # tick -> [(kind, node_or_cell, arg|None)]
 
     def add(self, tick: int, kind: str, node: int, arg: Optional[int] = None):
-        if kind not in ("preempt", "fail", "recover"):
+        if kind not in self.NODE_KINDS + self.CELL_KINDS:
             raise ValueError(f"unknown chaos event kind {kind!r}")
         self.events.setdefault(int(tick), []).append((kind, int(node), arg))
         return self
@@ -305,14 +326,21 @@ class ChaosSchedule:
             if m is None:
                 raise ValueError(
                     f"bad chaos event {part!r} — expected "
-                    "'preempt@T:nN[:kK]', 'fail@T:nN[:rR]' or "
-                    "'recover@T:nN'")
-            kind, argkind = m["kind"], m["argkind"]
-            if argkind == "k" and kind != "preempt":
-                raise ValueError(f"{part!r}: ':k' only applies to preempt")
+                    "'preempt@T:nN[:kK]', 'fail@T:nN[:rR]', 'recover@T:nN', "
+                    "'cell_down@T:cC', 'cell_up@T:cC', 'partition@T:cC[:kK]' "
+                    "or 'heal@T:cC'")
+            kind, scope, argkind = m["kind"], m["scope"], m["argkind"]
+            want = "c" if kind in cls.CELL_KINDS else "n"
+            if scope != want:
+                raise ValueError(
+                    f"{part!r}: {kind} targets a "
+                    f"{'cell (cC)' if want == 'c' else 'node (nN)'}")
+            if argkind == "k" and kind not in ("preempt", "partition"):
+                raise ValueError(
+                    f"{part!r}: ':k' only applies to preempt/partition")
             if argkind == "r" and kind != "fail":
                 raise ValueError(f"{part!r}: ':r' only applies to fail")
-            sched.add(int(m["tick"]), kind, int(m["node"]),
+            sched.add(int(m["tick"]), kind, int(m["idx"]),
                       int(m["arg"]) if m["arg"] is not None else None)
         return sched
 
@@ -356,7 +384,8 @@ class ElasticClusterFrontend:
                  tiers: Optional[TierSet] = None, mesh=None,
                  preempt_notice: int = 0,
                  chaos: Optional[ChaosSchedule] = None,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 ledger: Optional[RequestLedger] = None):
         self.make_replica = make_replica
         self.num_nodes = num_nodes
         self.tiers = tiers or DEFAULT_TIERS
@@ -393,7 +422,12 @@ class ElasticClusterFrontend:
         self.preempted_replicas = 0   # hard-dropped at notice expiry
         self.preempted_nodes = 0
         self.replica_ticks = 0
-        self.ledger = RequestLedger()
+        # ledger may be shared: a multi-cell routing plane passes one global
+        # RequestLedger to every cell so exactly-once holds ACROSS cells
+        # (an evacuated request re-routed to a sibling cell resolves in the
+        # same state machine — double_served stays 0 federation-wide)
+        self.ledger = RequestLedger() if ledger is None else ledger
+        self._blackout_profile: Optional[list] = None
         self._tick_goodput = 0        # this tick's in-deadline completions
         self._tick_timed_out = 0      # this tick's expired completions
         self._fractions = np.full(num_nodes, 1.0 / num_nodes, np.float32)
@@ -695,6 +729,42 @@ class ElasticClusterFrontend:
             raise ValueError(f"node n{node_idx} is not down")
         node.down = False
 
+    def blackout(self) -> list:
+        """Cell blackout (the multi-cell routing plane's evacuation hook):
+        hard-drop the ENTIRE cell now. Every node — healthy, under notice,
+        or mid-drain — goes through the same ledger-safe failure path as a
+        notice expiry (pending device futures flush BEFORE progress resets,
+        in-flight work evacuates, queues hand back in arrival order), then
+        the frontend's own pending pool is evacuated too and every stranded
+        request is returned for the caller to re-route globally. The
+        pre-blackout replica profile is remembered so ``restore`` can bring
+        the cell back through normal provisioning."""
+        self._blackout_profile = [
+            len(n.live) + len(n.draining) + len(n.spawning)
+            for n in self.nodes]
+        for node in self.nodes:
+            if node.down:
+                continue
+            node.preempt_left = -1    # a blackout supersedes any notice
+            node.spawning = []
+            for eng in list(node.live):
+                self._drain(node, eng)
+            self._preempt_finalize(node)
+        out = list(self.pending)
+        self.pending.clear()
+        return out
+
+    def restore(self) -> None:
+        """Bring a blacked-out cell back: every down node recovers (empty)
+        and the pre-blackout replica profile re-targets through the normal
+        provisioning pipeline — capacity returns after the cold-start
+        delay, exactly like any other scale-up."""
+        for node in self.nodes:
+            node.down = False
+        if self._blackout_profile is not None:
+            self.scale_to(np.asarray(self._blackout_profile, np.int32))
+            self._blackout_profile = None
+
     def _preempt_finalize(self, node: _Node):
         """Notice expired: hard-drop every replica still finishing work
         (the failure path — reconcile-flush, evacuate, re-queue merged),
@@ -719,6 +789,8 @@ class ElasticClusterFrontend:
         its evacuated work re-routes within the same tick)."""
         if self.chaos is not None:
             for kind, n, arg in self.chaos.pop(self.t):
+                if kind not in ChaosSchedule.NODE_KINDS:
+                    continue           # cell-kind events belong to the router
                 if kind == "fail":
                     self.fail_replica(n, 0 if arg is None else arg)
                 elif kind == "preempt":
@@ -1131,6 +1203,13 @@ class ElasticClusterFrontend:
             "goodput": float(self._tick_goodput),
             "timed_out": float(self._tick_timed_out),
             "preempt_risk": self.preempt_risk(),
+            # multi-cell view (PR 8): a single frontend IS one healthy cell
+            # — staleness/risk/shed are identically zero here, and the
+            # routing plane overrides them with real per-cell values. Key
+            # presence is constant so planner guards stay shape-stable.
+            "cell_staleness": np.zeros(1, np.float32),
+            "cell_risk": np.zeros(1, np.float32),
+            "shed": 0.0,
             **self._tier_metrics(finished_now),
         }
 

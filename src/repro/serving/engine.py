@@ -1789,14 +1789,22 @@ def normalize_fractions(fr: np.ndarray, mask: Optional[np.ndarray] = None
                         ) -> np.ndarray:
     """Simplex-normalize routing fractions with a uniform fallback — the
     numpy twin of ``core.balancer._mask_normalize``. Non-finite or negative
-    entries are zeroed; a zero/NaN sum falls back to uniform over the mask."""
+    entries are zeroed; a zero/NaN sum falls back to uniform over the mask.
+    An all-false mask (every node/cell down — a full blackout tick) returns
+    uniform-over-none, i.e. all zeros: callers must treat a zero-sum result
+    as "nothing can serve" and park arrivals (retry pool / pending) rather
+    than divide by the mask count — the old fallback silently routed
+    uniform over DEAD nodes."""
     fr = np.asarray(fr, np.float64)
     fr = np.where(np.isfinite(fr) & (fr > 0.0), fr, 0.0)
     if mask is not None:
-        fr = fr * (np.asarray(mask, np.float64) > 0.0)
+        m = np.asarray(mask, np.float64) > 0.0
+        if not m.any():
+            return np.zeros(fr.shape[0], np.float64)
+        fr = fr * m
     s = fr.sum()
     if s <= 1e-12:
-        if mask is not None and (np.asarray(mask) > 0).any():
+        if mask is not None:
             m = (np.asarray(mask) > 0).astype(np.float64)
             return m / m.sum()
         return np.full(fr.shape[0], 1.0 / fr.shape[0])

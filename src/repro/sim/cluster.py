@@ -218,9 +218,40 @@ class ClusterSim:
         s.notice_left[i] = -1
         self._preempt_down[i] = True
 
+    def blackout(self) -> float:
+        """Cell blackout, fluid mirror of the elastic frontend's evacuation
+        hook: every node preempts immediately (notices superseded, spawns
+        cancelled) and the evacuated backlog mass — which lands in the
+        retry pool — is drained out and returned for the routing plane to
+        re-inject into sibling cells. Remembers the replica profile for
+        ``restore``."""
+        s = self.state
+        self._blackout_profile = (s.active + s.pending.sum(axis=1)).copy()
+        for i in range(self.cfg.num_nodes):
+            if self._preempt_down[i]:
+                continue
+            s.notice_left[i] = -1
+            s.pending[i, :] = 0
+            self._preempt_finalize(i)
+        work, s.retry_pool = float(s.retry_pool), 0.0
+        return work
+
+    def restore(self) -> None:
+        """Recover every preempted-away node and re-target the pre-blackout
+        replica profile through the provisioning pipeline (cold start)."""
+        for i in range(self.cfg.num_nodes):
+            if self._preempt_down[i]:
+                self.recover_node(i)
+        prof = getattr(self, "_blackout_profile", None)
+        if prof is not None:
+            self.scale_to(prof)
+            self._blackout_profile = None
+
     def _advance_chaos(self):
         if self.chaos is not None:
             for kind, i, arg in self.chaos.pop(self.tick_count + 1):
+                if kind not in ("preempt", "fail", "recover"):
+                    continue          # cell-kind events belong to the router
                 if kind == "preempt":
                     self.preempt_node(i, notice=arg)
                 elif kind == "recover":
@@ -315,6 +346,11 @@ class ClusterSim:
             "up": s.up.copy(),
             "active_replicas": s.active.copy(),
             "replica_ticks": int(s.active.sum()),
+            # multi-cell view (PR 8): one sim is one healthy cell — zeros
+            # here; the routing plane overrides with real per-cell values
+            "cell_staleness": np.zeros(1, np.float32),
+            "cell_risk": np.zeros(1, np.float32),
+            "shed": 0.0,
         }
         if self.tier_queue is not None:
             m.update(self._tier_tick(

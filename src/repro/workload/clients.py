@@ -90,7 +90,7 @@ class ClientPool:
     @staticmethod
     def _zero_row() -> dict:
         return {"issued": 0, "ok": 0, "timed_out": 0, "retries": 0,
-                "abandoned": 0, "rejected": 0}
+                "abandoned": 0, "rejected": 0, "shed": 0}
 
     def _row(self, tier: str) -> dict:
         return self.tier_stats.setdefault(tier, self._zero_row())
@@ -160,9 +160,11 @@ class ClientPool:
         if accepted:
             c.state = _WAITING
             return
-        # admission cap said no (ledger state 'rejected'): backoff-retry
-        # like a timeout, abandon when out of budget
-        self._bump(c.tier, "rejected")
+        # admission said no — the cap ('rejected') or overload shedding
+        # ('shed', multi-cell router): backoff-retry like a timeout,
+        # abandon when out of budget
+        st = self.fe.ledger.state.get(c.rid)
+        self._bump(c.tier, "shed" if st == "shed" else "rejected")
         self._settle_failure(c)
 
     def _settle_failure(self, c: _Client):
@@ -190,9 +192,13 @@ class ClientPool:
                 self.latencies.append((c.tier, float(now) - c.sent_at))
                 c.state = _THINKING
                 c.timer = self._think()
-            elif st in ("timed_out", "rejected"):
+            elif st in ("timed_out", "rejected", "shed"):
                 if st == "timed_out":
                     self._bump(c.tier, "timed_out")
+                elif st == "shed":
+                    # queued at submit time, shed later by the router's
+                    # admission sweep (pressure crossed the threshold)
+                    self._bump(c.tier, "shed")
                 self._settle_failure(c)
         self._spawn_wave()
         if self.quiesced:
@@ -226,6 +232,8 @@ class ClientPool:
                 else:
                     if st == "timed_out":
                         self._bump(c.tier, "timed_out")
+                    elif st == "shed":
+                        self._bump(c.tier, "shed")
                     self.fe.abandon(c.rid)
                     self._bump(c.tier, "abandoned")
             else:

@@ -1,0 +1,325 @@
+"""Multi-cell fault-tolerant routing plane (``control.cells``).
+
+Covers the federation's three failure classes end to end — cell blackout
+(evacuation + re-route with a single global ledger), control-plane
+partition (staleness decay, reactive fallback, hard quarantine) and total
+overload (tier-aware admission shedding) — plus the invariants that make
+it safe to always run through the router: single-cell parity (identical
+streams, zero extra syncs/dispatches), all-false-mask parking (satellite 1
+of PR 8) and the always-on degraded-mode metric keys.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_cluster import ClusterConfig
+from repro.control import CellRouter, MetricsView, MultiCellBackend
+from repro.models import make_model
+from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
+                           ReplicaEngine, Request)
+from repro.sim.cluster import ClusterSim
+from repro.workload import ClientPool, parse_tiers
+
+MAX_SEQ = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    c = get_config("granite-3-8b").reduced()
+    m = make_model(c, tp=1)
+    params = m.init(jax.random.PRNGKey(0), jnp.float32)
+    return c, m, params
+
+
+def _factory(m, params, max_batch=2, tiers=None):
+    def make_replica(rid):
+        return ReplicaEngine(m, params, max_batch=max_batch, max_seq=MAX_SEQ,
+                             rid=rid, tiers=tiers)
+    return make_replica
+
+
+def _req(i, plen=4, n_new=4, tier=None):
+    r = Request(i, [1 + (i + j) % 97 for j in range(plen)],
+                max_new_tokens=n_new)
+    if tier is not None:
+        r.tier = tier
+    return r
+
+
+def _cell(m, params, nodes=1, replicas=1, tiers=None, **kw):
+    return ElasticClusterFrontend(_factory(m, params, tiers=tiers), nodes,
+                                  initial_replicas=replicas, tiers=tiers,
+                                  **kw)
+
+
+def _view(queue=0.0, capacity=1.0, pressure=None, risk=0.0, staleness=0):
+    v = MetricsView({"queue": queue, "capacity": capacity,
+                     "pressure": queue if pressure is None else pressure,
+                     "risk": risk, "in_flight": 0, "active": 1,
+                     "speed": 1.0, "util": 0.0}, {})
+    v.staleness = staleness
+    return v
+
+
+# -------------------------------------------------------- router policy
+def test_router_weights_fresh_stale_quarantined_dead():
+    r = CellRouter(4, max_staleness=2, confidence_decay=0.5, risk_bias=0.8)
+    views = [_view(capacity=4.0), _view(capacity=4.0, staleness=1),
+             _view(capacity=4.0, staleness=3), _view(capacity=4.0)]
+    alive = np.array([True, True, True, False])
+    fr = np.array([0.4, 0.3, 0.2, 0.1])
+    w = r.weights(fr, views, alive)
+    # dead + quarantined cells carry zero weight; the rest sum to one
+    assert w[2] == 0.0 and w[3] == 0.0
+    assert w.sum() == pytest.approx(1.0)
+    # stale cell 1 was replaced by its confidence-decayed capacity share
+    # (4/8 * 0.5 = 0.25 pre-normalization, vs cell 0's learned 0.4)
+    assert w[1] == pytest.approx(0.25 / (0.4 + 0.25))
+    assert w[0] > w[1]
+    # deeper staleness -> geometrically less weight
+    views[1].staleness = 2
+    w2 = r.weights(fr, views, alive)
+    assert w2[1] < w[1]
+
+
+def test_router_risk_bias_shifts_traffic():
+    r = CellRouter(2, risk_bias=0.8)
+    views = [_view(capacity=4.0, risk=1.0), _view(capacity=4.0)]
+    alive = np.ones(2, bool)
+    w = r.weights(np.array([0.5, 0.5]), views, alive)
+    # a doomed cell (every node under notice) keeps only 1-risk_bias of
+    # its weight before renormalization
+    assert w[0] == pytest.approx(0.2 / 1.2)
+    assert w[1] > w[0]
+
+
+def test_router_all_dead_parks_not_uniform():
+    """Satellite 1: an all-false healthy mask must yield uniform-over-none
+    (all zeros), never a uniform split over dead cells."""
+    r = CellRouter(3)
+    views = [_view() for _ in range(3)]
+    w = r.weights(np.full(3, 1 / 3), views, np.zeros(3, bool))
+    assert w.tolist() == [0.0, 0.0, 0.0]
+
+
+def test_router_static_split_ignores_health():
+    r = CellRouter(2, adaptive=False)
+    views = [_view(risk=1.0, staleness=9), _view()]
+    w = r.weights(np.array([0.9, 0.1]), views, np.ones(2, bool))
+    assert w.tolist() == [0.5, 0.5]
+
+
+def test_shed_tiers_policy():
+    tiers = parse_tiers("premium:0.3:w5:4,standard:0.3:w2,batch:0.4:w1")
+    r = CellRouter(2, tiers=tiers, shed_threshold=2.0)
+    alive = np.ones(2, bool)
+    # one healthy cell has room -> no shedding (route there instead)
+    views = [_view(pressure=40.0, capacity=4.0), _view(pressure=1.0,
+                                                       capacity=4.0)]
+    assert r.shed_tiers(views, alive) == frozenset()
+    # every cell past the threshold -> lowest tier sheds first
+    views = [_view(pressure=10.0, capacity=4.0),
+             _view(pressure=9.0, capacity=4.0)]
+    assert r.shed_tiers(views, alive) == frozenset({"batch"})
+    # deeper overload escalates, but the top tier is NEVER shed
+    views = [_view(pressure=400.0, capacity=4.0),
+             _view(pressure=400.0, capacity=4.0)]
+    assert r.shed_tiers(views, alive) == frozenset({"batch", "standard"})
+    # full blackout parks instead of shedding
+    assert r.shed_tiers(views, np.zeros(2, bool)) == frozenset()
+    # no threshold / single tier -> disabled
+    assert CellRouter(2, tiers=tiers).shed_tiers(views, alive) == frozenset()
+    assert CellRouter(2, shed_threshold=2.0).shed_tiers(
+        [_view(pressure=400.0, capacity=4.0)] * 2, alive) == frozenset()
+
+
+# -------------------------------------------------- single-cell parity
+def test_single_cell_parity_streams_and_dispatches(setup):
+    """Routing one cell through the plane is free: identical token streams
+    and identical sync/dispatch counts vs driving the frontend directly."""
+    c, m, params = setup
+    direct = _cell(m, params, nodes=2, replicas=1, seed=3)
+    routed = MultiCellBackend([_cell(m, params, nodes=2, replicas=1,
+                                     seed=3)])
+    for t in range(4):
+        for i in range(2):
+            rid = 2 * t + i
+            direct.submit(_req(rid))
+            routed.submit(_req(rid))
+        md = direct.tick(0.0)
+        mr = routed.tick(0.0)
+        assert mr["syncs"] == md["syncs"]
+        assert mr["decode_dispatches"] == md["decode_dispatches"]
+        assert mr["prefill_dispatches"] == md["prefill_dispatches"]
+    direct.run_until_drained()
+    routed.run_until_drained()
+
+    def stream(fe):
+        return sorted((r.rid, tuple(r.output)) for r in fe.finished)
+
+    assert stream(routed) == stream(direct)
+    assert routed.sync_count() == direct.sync_count()
+    assert routed.decode_dispatches() == direct.decode_dispatches()
+    assert routed.ledger.balanced() and direct.ledger.balanced()
+
+
+def test_degraded_mode_keys_always_on(setup):
+    """Single-cell backends emit the multi-cell keys as identical zeros
+    (shape-stable planner guards — control/backend.py contract)."""
+    c, m, params = setup
+    fe = _cell(m, params)
+    fe.submit(_req(0))
+    m1 = fe.tick(0.0)
+    sim = ClusterSim(ClusterConfig(num_nodes=2, node_mtbf=1e12,
+                                   straggler_prob=0.0), 2.0, seed=0)
+    m2 = sim.tick(1.0, np.full(2, 0.5, np.float32))
+    for md in (m1, m2):
+        assert md["cell_staleness"].tolist() == [0.0]
+        assert md["cell_risk"].tolist() == [0.0]
+        assert md["shed"] == 0.0
+    fe.run_until_drained()
+
+
+# ------------------------------------------------------- cell blackout
+def test_blackout_evacuates_exactly_once(setup):
+    """Kill a cell mid-flight under retrying clients: everything it held
+    re-routes to the sibling, the single global ledger stays balanced and
+    nothing is ever served twice ACROSS cells."""
+    c, m, params = setup
+    rng = np.random.default_rng(0)
+
+    def request_factory(rid, tick):
+        plen = int(rng.integers(2, 8))
+        return Request(rid, rng.integers(1, c.vocab_size, plen).tolist(),
+                       max_new_tokens=int(rng.integers(3, 8)))
+
+    mc = MultiCellBackend(
+        [_cell(m, params, seed=1), _cell(m, params, seed=2)],
+        chaos=ChaosSchedule.parse("cell_down@4:c0,cell_up@10:c0"), seed=0)
+    pool = ClientPool(mc, 8, request_factory=request_factory,
+                      think_time=1.0, timeout=10.0, max_retries=2, seed=5)
+    for t in range(16):
+        pool.tick()
+        mc.tick(0.0)
+    pool.quiesce()
+    mc.run_until_drained()
+    pool.finalize()
+    assert mc.cell_downs == 1
+    assert mc.evacuated_total > 0            # the blackout caught real work
+    b = mc.ledger.balance()
+    assert b["live"] == 0 and b["double_served"] == 0
+    assert mc.ledger.balanced()
+    assert pool.stats["ok"] > 0
+    # the two cells share ONE ledger object
+    assert mc.cells[0].ledger is mc.ledger is mc.cells[1].ledger
+
+
+def test_full_blackout_parks_arrivals_then_recovers(setup):
+    """Satellite 1 end to end: when every cell is dark the router parks
+    arrivals (zero weights, retry-pool semantics) instead of routing them
+    into a dead cell, and serves them after restore."""
+    c, m, params = setup
+    mc = MultiCellBackend(
+        [_cell(m, params, seed=1)],
+        chaos=ChaosSchedule.parse("cell_down@2:c0,cell_up@5:c0"))
+    for i in range(3):
+        mc.submit(_req(i))
+    mc.tick(0.0)
+    for i in range(3, 5):
+        mc.submit(_req(i))          # arrive INTO the outage
+    m2 = mc.tick(0.0)               # t=2: blackout fires
+    assert m2["up"].tolist() == [0.0]
+    assert m2["router_weights"].tolist() == [0.0]
+    assert m2["router_pending"] > 0          # parked, not lost or culled
+    m3 = mc.tick(0.0)
+    assert m3["router_pending"] == m2["router_pending"]
+    mc.run_until_drained()
+    assert sorted(r.rid for r in mc.finished) == list(range(5))
+    assert mc.ledger.balanced()
+    assert mc.ledger.double_served == 0
+
+
+# ------------------------------------------------ partition + quarantine
+def test_partition_staleness_decay_and_quarantine():
+    """Fluid federation (no model forwards): a partitioned cell's view
+    ages, its routing weight decays geometrically, and past max_staleness
+    it is hard-quarantined (zero weight, up_mask 0) until the feed heals."""
+    cfg = ClusterConfig(num_nodes=2, node_mtbf=1e12, straggler_prob=0.0)
+    cells = [ClusterSim(cfg, 2.0, seed=s) for s in (0, 1)]
+    mc = MultiCellBackend(
+        cells, router=CellRouter(2, max_staleness=2, confidence_decay=0.5),
+        chaos=ChaosSchedule.parse("partition@2:c0:k4"))
+    weights, stale = [], []
+    for t in range(8):
+        md = mc.tick(4.0)
+        weights.append(float(md["router_weights"][0]))
+        stale.append(int(md["cell_staleness"][0]))
+    # the feed goes dark at t=2 and ages for k=4 ticks, then heals
+    assert stale == [0, 1, 2, 3, 4, 0, 0, 0]
+    # weights are computed at tick START (one view-age behind the reported
+    # staleness): decay while stale-but-trusted, then hard quarantine
+    assert weights[2] < weights[1] and weights[3] < weights[2]
+    assert weights[4] == 0.0 and weights[5] == 0.0
+    # heal: the view refreshes and weight recovers
+    assert weights[6] > 0.0
+    assert mc.quarantine_ticks == 2
+    md = mc.metrics()
+    assert md["quarantined"].tolist() == [0.0, 0.0]
+
+
+# ------------------------------------------------------ overload shedding
+def test_overload_sheds_lowest_tier_with_ledger_terminal(setup):
+    """Total overload degrades gracefully: the batch tier is admission-shed
+    with an explicit retryable ledger terminal, premium keeps serving, and
+    conservation still balances with the 5-state histogram."""
+    c, m, params = setup
+    tiers = parse_tiers("premium:0.5:w5:6,batch:0.5:w1")
+    router = CellRouter(2, tiers=tiers, shed_threshold=2.0)
+    mc = MultiCellBackend(
+        [_cell(m, params, tiers=tiers, seed=1),
+         _cell(m, params, tiers=tiers, seed=2)],
+        tiers=tiers, router=router, seed=0)
+    for t in range(8):
+        base = 10 * t
+        for i in range(10):       # ~5x the federation's capacity
+            tier = "premium" if i % 2 == 0 else "batch"
+            mc.submit(_req(base + i, n_new=6, tier=tier))
+        mc.tick(0.0)
+    assert mc.shed_total > 0
+    per = mc.ledger.per_tier
+    assert per["batch"]["shed"] > 0
+    assert per.get("premium", {}).get("shed", 0) == 0   # top tier protected
+    mc.run_until_drained()
+    assert mc.ledger.double_served == 0
+    bal = mc.ledger.balance()
+    assert bal["live"] == 0
+    assert bal["submitted"] == sum(
+        bal[k] for k in ("finished", "timed_out", "abandoned", "rejected",
+                         "shed"))
+
+
+# --------------------------------------------------------- chaos plumbing
+def test_cell_chaos_validation_and_filtering(setup):
+    c, m, params = setup
+    mc = MultiCellBackend([_cell(m, params)])
+    with pytest.raises(ValueError, match="out of range"):
+        mc.cell_down(3)
+    with pytest.raises(ValueError, match="not down"):
+        mc.cell_up(0)
+    mc.cell_down(0)
+    with pytest.raises(ValueError, match="already down"):
+        mc.cell_down(0)
+    mc.cell_up(0)
+    # node-kind events in a shared schedule are ignored by the router
+    # (they belong to the cells) and cell kinds by the cells
+    mc2 = MultiCellBackend(
+        [_cell(m, params, chaos=ChaosSchedule.parse("preempt@1:n0:k1"))],
+        chaos=ChaosSchedule.parse("preempt@1:n0:k1"))
+    mc2.submit(_req(0))
+    mc2.tick(0.0)
+    assert mc2._alive.tolist() == [True]     # router skipped the node event
+    assert mc2.cells[0].preempt_risk().tolist() == [1.0]  # cell applied it
+    mc2.run_until_drained()
+    assert mc2.ledger.balanced()

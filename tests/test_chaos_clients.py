@@ -203,6 +203,58 @@ def test_preempt_notice_drains_then_drops(setup):
     assert fe2.ledger.balanced()
 
 
+# ------------------------------------------------------- edge ordering
+def test_same_tick_preempt_recover_applies_in_order(setup):
+    """Same-tick events apply in spec order: an immediate (k0) preemption
+    hard-drops and downs the node, then the recover in the SAME tick
+    brings it back — net effect one preemption, node schedulable again,
+    every evacuated request re-served exactly once."""
+    c, m, params = setup
+    fe = ElasticClusterFrontend(
+        _factory(m, params), 2, initial_replicas=1, seed=1,
+        chaos=ChaosSchedule.parse("preempt@3:n0:k0,recover@3:n0"))
+    for i in range(6):
+        fe.submit(_req(i, n_new=8))
+    for _ in range(4):
+        fe.tick(0.0)
+    assert fe.preempted_nodes == 1
+    assert not fe.nodes[0].down              # recovered within the tick
+    fe.scale_to(np.array([1, 1]))            # schedulable again (empty)
+    assert fe.nodes[0].spawning
+    fe.run_until_drained()
+    assert sorted(r.rid for r in fe.finished) == list(range(6))
+    assert fe.ledger.balanced() and fe.ledger.double_served == 0
+
+
+def test_cell_down_races_inflight_drain(setup):
+    """A blackout landing while a node is mid-drain under a preemption
+    notice must supersede the notice and push everything through the same
+    ledger-safe evacuation path — balanced accounting, nothing lost or
+    double-served across the re-route to the sibling cell."""
+    from repro.control import MultiCellBackend
+
+    c, m, params = setup
+    cell0 = ElasticClusterFrontend(
+        _factory(m, params), 2, initial_replicas=1, seed=1,
+        chaos=ChaosSchedule.parse("preempt@2:n0:k4"))
+    cell1 = ElasticClusterFrontend(_factory(m, params), 2,
+                                   initial_replicas=1, seed=2)
+    mc = MultiCellBackend(
+        [cell0, cell1],
+        chaos=ChaosSchedule.parse("cell_down@3:c0,cell_up@8:c0"), seed=0)
+    for i in range(8):
+        mc.submit(_req(i, n_new=8))
+    for t in range(4):
+        mc.tick(0.0)
+        if t == 1:
+            # notice active on cell 0's node 0, drain in flight
+            assert cell0.nodes[0].draining or cell0.preempt_risk()[0] == 1.0
+    assert mc.cell_downs == 1 and mc.evacuated_total > 0
+    mc.run_until_drained()
+    assert sorted(r.rid for r in mc.finished) == list(range(8))
+    assert mc.ledger.balanced() and mc.ledger.double_served == 0
+
+
 # ------------------------------------------------------ conservation matrix
 def test_conservation_full_churn_matrix(setup):
     """Drain + stochastic failure + preemption mid-drain + retry storm, all

@@ -187,6 +187,12 @@ def test_normalize_fractions_guards_zero_and_nan():
     assert np.allclose(masked, [0.5, 0.5, 0, 0])
     fr = normalize_fractions(np.array([np.inf, 1.0, 0, 0]))
     assert np.isfinite(fr).all() and fr.sum() == pytest.approx(1.0)
+    # all-false mask: uniform-over-NONE (zeros), never a uniform split over
+    # dead nodes — callers park arrivals instead of routing them (PR 8)
+    dead = normalize_fractions(np.ones(n), mask=np.zeros(n))
+    assert dead.tolist() == [0.0] * n
+    assert normalize_fractions(np.full(n, np.nan),
+                               mask=np.zeros(n)).tolist() == [0.0] * n
 
 
 def test_frontend_fractions_policy_survives_bad_fn(setup):
@@ -308,6 +314,58 @@ def test_method_ranking_matches_across_backends_3tier(setup):
                      TierSpec("standard", share=0.33, weight=2.0),
                      TierSpec("batch", share=0.33, weight=1.0)])
     _ranking_parity(m, params, tiers=tiers)
+
+
+def test_async_observation_shifts_decisions_at_most_one_tick(setup):
+    """Stale-observation contract: the async tick's metrics describe the
+    device state one tick earlier, so on a fixed trace every rule-based
+    ``scale_to`` decision of the async backend must appear among the eager
+    oracle's decisions within one plan interval (rbas plans every tick,
+    window t-1..t+1) — staleness may DELAY a decision, never diverge it.
+    Pinned on a single-node backend: with several nodes the lag legally
+    shifts WHICH node grows first (see ``_run_elastic``), which compounds
+    into different per-node trajectories; the total-capacity decision is
+    the contract."""
+    c, m, params = setup
+    arrivals = np.full(28, 1.6, np.float32)
+    cfg = ClusterConfig(
+        num_nodes=1, horizon=4, forecast_window=8, provisioning_delay=2,
+        max_replicas_per_node=4, min_replicas_per_node=1, scale_interval=3,
+        cooldown=6, straggler_prob=0.0, node_mtbf=1e12)
+
+    def decisions(async_tick):
+        def request_factory(rid, tick):
+            return Request(rid, [1 + rid % 50, 2, 3, 4],
+                           max_new_tokens=N_NEW)
+
+        fe = ElasticClusterFrontend(
+            _factory(m, params, max_batch=2), 1, initial_replicas=1,
+            provisioning_delay=cfg.provisioning_delay,
+            max_replicas_per_node=cfg.max_replicas_per_node,
+            request_factory=request_factory, seed=0, est_tokens=N_NEW,
+            async_tick=async_tick)
+        plane = ControlPlane(cfg, fe, balancer="rr", scaler="rbas",
+                             unit_capacity=2.0 / N_NEW, seed=0,
+                             init_arrival=float(arrivals[:5].mean()))
+        out = []
+        orig = fe.scale_to
+
+        def spy(target):
+            out.append(int(np.asarray(target).sum()))
+            orig(target)
+
+        fe.scale_to = spy
+        for a in arrivals:
+            plane.step(float(a))
+        return out
+
+    eager = decisions(False)
+    lagged = decisions(True)
+    assert len(eager) == len(lagged) == len(arrivals)
+    for t, d in enumerate(lagged):
+        lo, hi = max(t - 1, 0), min(t + 1, len(eager) - 1)
+        assert d in eager[lo:hi + 1], (t, d, eager[lo:hi + 1])
+    assert eager[-1] == lagged[-1]       # same steady-state capacity
 
 
 def test_ours_stack_runs_on_elastic_backend(setup):
