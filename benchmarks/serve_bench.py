@@ -55,7 +55,16 @@ Phases over real CPU forwards:
     quarantine), tier-aware overload shedding, and the flash-crowd-1000
     re-run through the router with shedding armed — premium-tier goodput
     must beat the unrouted aggregate collapse, with every shed an explicit
-    ledger terminal.
+    ledger terminal. PR 10 adds the **plane-outage A/B**: the same
+    10-tick global-plane blackout with a load burst landing mid-outage,
+    run hierarchical (per-cell autoscalers under capacity leases, the
+    ``PlaneSupervisor`` loop) vs centralized-frozen (the PR 8 single
+    ``ControlPlane``, driver frozen while ``plane_alive`` is false).
+    Hierarchical must win on goodput AND scale-reaction latency (ticks
+    from the burst to the first replica added) — both asserted. A
+    ``plane_flap`` cell (two outages back-to-back plus a checkpoint/
+    restore supervisor swap between them) proves repeated crash/restore
+    keeps the ledger exactly-once.
 
 Tick-wall stats separate *steady-state* ticks from ticks that hit an XLA
 compile (``serve_kernel_traces`` delta > 0): a single ~1s retrace inside a
@@ -864,6 +873,170 @@ def _run_multicell_cell(model, params, cfg, *, clients, ticks, timeout,
     return row
 
 
+PLANE_CHAOS = "plane_down@8:k10"     # dark backend ticks 8..17, up at 18
+PLANE_BURST_TICK = 12                # burst cohort released MID-outage
+
+
+def _run_plane_cell(model, params, cfg, *, hierarchy,
+                    cell_chaos=PLANE_CHAOS, dark_windows=((8, 18),),
+                    base_clients=8, burst_clients=40,
+                    burst_tick=PLANE_BURST_TICK, ticks=32, timeout=8.0,
+                    retries=1, think=3.0, plan_interval=6,
+                    restart_supervisor_at=None, seed=0) -> dict:
+    """One plane-outage arm: 2 elastic cells, a closed-loop base load plus
+    a dormant client cohort released mid-outage (the burst the dead plane
+    cannot see). ``hierarchy=True`` runs ``PlaneSupervisor`` + per-cell
+    ``CellController``s under leases; ``hierarchy=False`` is the PR 8
+    baseline — one central ``ControlPlane`` whose driver freezes while
+    ``plane_alive`` is false. Leases are bounds-only
+    (``apply_budget=False``) and span the full fleet, so BOTH arms can
+    reach the same max capacity — the A/B isolates who may *act* during
+    the outage, not capacity limits. Scale-reaction latency = ticks from
+    the burst to the first rise of total in-flight replicas above the
+    burst-onset count. ``restart_supervisor_at`` simulates a global-plane
+    process crash: checkpoint, fresh supervisor + controllers, restore,
+    keep running."""
+    from repro.configs.paper_cluster import ClusterConfig
+    from repro.control import (CellController, ControlPlane, GlobalPlanner,
+                               MultiCellBackend, PlaneSupervisor)
+    from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
+                               ReplicaEngine, Request)
+    from repro.workload import ClientPool
+
+    rng = np.random.default_rng(seed)
+
+    def mk(rid):
+        return ReplicaEngine(model, params, max_batch=MAX_BATCH,
+                             max_seq=MAX_SEQ, rid=rid)
+
+    def rf(rid, tick):
+        plen = int(rng.integers(2, 10))
+        return Request(rid, rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=4)
+
+    def cell(seed_):
+        return ElasticClusterFrontend(
+            mk, NODES, initial_replicas=1, max_replicas_per_node=2,
+            provisioning_delay=2, seed=seed_, est_tokens=4,
+            preempt_notice=3)
+
+    mc = MultiCellBackend([cell(seed), cell(seed + 100)],
+                          chaos=ChaosSchedule.parse(cell_chaos), seed=seed)
+    cell_cap = NODES * 2                 # 4 per cell, 8 fleet-wide
+    sup = plane = None
+
+    def mk_ctls():
+        # patience/cooldown 1: the bench measures best-case local reaction
+        return [CellController(mc, c, patience=1, cooldown=1)
+                for c in range(2)]
+
+    if hierarchy:
+        planner = GlobalPlanner(2, total_budget=2 * cell_cap,
+                                max_per_cell=cell_cap, lease_slack=0.5)
+        sup = PlaneSupervisor(mc, planner, mk_ctls(),
+                              plan_interval=plan_interval,
+                              apply_budget=False)
+    else:
+        ccfg = ClusterConfig(num_nodes=2, horizon=8, forecast_window=16,
+                             provisioning_delay=2,
+                             max_replicas_per_node=cell_cap,
+                             min_replicas_per_node=1, scale_interval=5,
+                             cooldown=8, straggler_prob=0.0,
+                             node_mtbf=1e12)
+        plane = ControlPlane(ccfg, mc, balancer="rr", scaler="rbas",
+                             unit_capacity=MAX_BATCH / 4, seed=seed,
+                             init_arrival=2.0)
+
+    # one pool, one rid space: spawn_rate is re-read every tick, so the
+    # burst cohort stays dormant (rate 0) until the release tick
+    pool = ClientPool(mc, base_clients + burst_clients,
+                      request_factory=rf, think_time=think,
+                      timeout=timeout, max_retries=retries,
+                      spawn_rate=float(base_clients), seed=seed + 1)
+
+    def in_flight():
+        return sum(mc.cell_in_flight(c) for c in range(2))
+
+    # stats survive a supervisor swap via these accumulators
+    hist = {"plans": 0, "restores": 0, "outage_steps": 0}
+    action_ticks: list = []
+    curve, replica_curve = [], []
+    base_if, reaction, restarts = None, None, 0
+    for t in range(ticks):
+        if t == 1:
+            pool.spawn_rate = 0.0        # base cohort is in; hold the rest
+        if burst_clients and t == burst_tick:
+            pool.spawn_rate = float(burst_clients)
+            base_if = in_flight()
+        if sup is not None and restart_supervisor_at == t:
+            ckpt = sup.checkpoint()
+            smry = sup.summary()
+            for k in hist:
+                hist[k] += smry[k]
+            action_ticks += [tk for c in sup.controllers
+                             for tk in c.action_ticks]
+            sup = PlaneSupervisor(mc, sup.planner, mk_ctls(),
+                                  plan_interval=plan_interval,
+                                  apply_budget=False)
+            sup.restore(ckpt)
+            restarts += 1
+        pool.tick()
+        if sup is not None:
+            m = sup.step(0.0)
+        elif getattr(mc, "plane_alive", True):
+            m = plane.step(0.0)
+        else:
+            m = mc.tick(0.0)             # centralized arm: plane frozen
+        curve.append(int(m["goodput"]))
+        replica_curve.append(in_flight())
+        if (reaction is None and base_if is not None
+                and in_flight() > base_if):
+            reaction = t - burst_tick
+    pool.quiesce()
+    mc.run_until_drained()
+    pool.finalize()
+    if sup is not None:
+        smry = sup.summary()
+        for k in hist:
+            hist[k] += smry[k]
+        action_ticks += [tk for c in sup.controllers
+                         for tk in c.action_ticks]
+    dark_actions = sum(1 for tk in action_ticks
+                       if any(a <= tk < b for a, b in dark_windows))
+    led, s = mc.ledger, pool.summary()
+    states = led.balance()
+    total = max(led.submitted, 1)
+    row = {
+        "hierarchy": bool(hierarchy), "cells": 2,
+        "base_clients": base_clients, "burst_clients": burst_clients,
+        "burst_tick": burst_tick if burst_clients else None,
+        "ticks": ticks, "cell_chaos": cell_chaos,
+        "submitted": led.submitted,
+        "finished": states["finished"], "timed_out": states["timed_out"],
+        "abandoned": states["abandoned"], "rejected": states["rejected"],
+        "shed": states["shed"],
+        "retries": led.retries, "duplicates": led.duplicates,
+        "wasted": led.wasted, "double_served": led.double_served,
+        "goodput_frac": round(states["finished"] / total, 3),
+        "slo_attainment": round(s["ok"] / max(s["ok"] + s["abandoned"], 1),
+                                3),
+        "client_e2e_p95_ticks": s["latency_p95"],
+        "plane_outages": mc.plane_outages,
+        "plane_dark_ticks": mc.plane_outage_ticks,
+        "local_actions": mc.local_actions_total,
+        "local_actions_dark": dark_actions,
+        "scale_reaction_ticks": reaction,
+        "replica_curve": replica_curve,
+        "ledger_balanced": led.balanced(),
+        "goodput_curve": curve,
+    }
+    if sup is not None:
+        row.update(plans=hist["plans"], restores=hist["restores"],
+                   outage_steps=hist["outage_steps"],
+                   supervisor_restarts=restarts)
+    return row
+
+
 def bench_failure_matrix(model, params, cfg) -> dict:
     """Closed-loop clients through the chaos cells (see MATRIX_CELLS) plus
     the multi-cell routing-plane cells (PR 8): cell blackout routed vs a
@@ -876,7 +1049,12 @@ def bench_failure_matrix(model, params, cfg) -> dict:
     lost/duplicated requests is not a goodput number. The multi-cell
     contracts are asserted too: routed goodput strictly above the static
     split under a blackout, and premium flash-crowd goodput above the
-    PR 7 aggregate collapse with every shed an explicit ledger terminal."""
+    PR 7 aggregate collapse with every shed an explicit ledger terminal.
+
+    PR 10 plane-outage contracts (see ``_run_plane_cell``): hierarchical
+    goodput strictly above centralized-frozen, hierarchical scale-reaction
+    latency strictly below, local scale actions observed DURING the dark
+    window, and the flap cell's two restores with a balanced ledger."""
     out = {}
     for name, kw in MATRIX_CELLS.items():
         cell = _run_matrix_cell(model, params, cfg, **kw)
@@ -935,6 +1113,46 @@ def bench_failure_matrix(model, params, cfg) -> dict:
     assert (fc["per_tier"]["premium"]["goodput_frac"]
             > out["flash_crowd_1000"]["goodput_frac"]), \
         "shedding failed to lift premium goodput above the collapse"
+
+    # ---- plane-outage A/B (PR 10): hierarchical vs centralized-frozen ---
+    # identical chaos, identical client streams; the burst lands mid-
+    # outage, so only the arm that can act without the global plane reacts
+    plane_cells = {
+        "plane_outage_hier": dict(hierarchy=True),
+        "plane_outage_centralized": dict(hierarchy=False),
+        # two blackouts back-to-back + a checkpoint/restore supervisor
+        # swap between them: repeated crash/restore, no burst cohort
+        "plane_flap": dict(hierarchy=True,
+                           cell_chaos="plane_down@6:k6,plane_down@18:k6",
+                           dark_windows=((6, 12), (18, 24)),
+                           base_clients=12, burst_clients=0, ticks=30,
+                           restart_supervisor_at=14),
+    }
+    for name, kw in plane_cells.items():
+        cell = _run_plane_cell(model, params, cfg, **kw)
+        assert cell["ledger_balanced"], f"{name}: global ledger unbalanced"
+        assert cell["double_served"] == 0, \
+            f"{name}: rid served twice across a plane outage"
+        out[name] = cell
+    hier, cen = out["plane_outage_hier"], out["plane_outage_centralized"]
+    assert hier["goodput_frac"] > cen["goodput_frac"], \
+        "hierarchical control did not beat the frozen centralized plane"
+    assert hier["local_actions_dark"] > 0, \
+        "no local scale action landed during the plane outage"
+    h_r = hier["scale_reaction_ticks"]
+    # a never-reacting arm scores the remaining window (lower bound)
+    c_r = cen["scale_reaction_ticks"]
+    c_eff = c_r if c_r is not None else cen["ticks"] - PLANE_BURST_TICK
+    assert h_r is not None and h_r < c_eff, \
+        f"hierarchical reaction {h_r} not below centralized {c_eff}"
+    out["plane_outage_goodput_gain"] = round(
+        hier["goodput_frac"] - cen["goodput_frac"], 3)
+    out["plane_scale_reaction_gain_ticks"] = int(c_eff - h_r)
+    flap = out["plane_flap"]
+    assert flap["restores"] == 2, \
+        f"flap saw {flap['restores']} restores, expected 2"
+    assert flap["supervisor_restarts"] == 1 and flap["plans"] > 0, \
+        "checkpoint/restore swap did not keep the plan loop running"
     return {"failure_matrix": out}
 
 
@@ -1072,6 +1290,19 @@ def main() -> list:
          f" shed, vs "
          f"{blob['failure_matrix']['flash_crowd_1000']['goodput_frac']}"
          " aggregate unrouted"),
+        ("serve/goodput_plane_outage_hier",
+         blob["failure_matrix"]["plane_outage_hier"]["goodput_frac"] * 1e6,
+         f"centralized-frozen "
+         f"{blob['failure_matrix']['plane_outage_centralized']['goodput_frac']},"
+         f" gain {blob['failure_matrix']['plane_outage_goodput_gain']}"),
+        ("serve/plane_scale_reaction_ticks",
+         blob["failure_matrix"]["plane_outage_hier"]
+         ["scale_reaction_ticks"] * 1e6,
+         f"burst mid-outage; centralized "
+         f"{blob['failure_matrix']['plane_outage_centralized']['scale_reaction_ticks']}t,"
+         f" {blob['failure_matrix']['plane_outage_hier']['local_actions_dark']}"
+         " dark-window actions, flap restores="
+         f"{blob['failure_matrix']['plane_flap']['restores']}"),
     ]
 
 

@@ -27,6 +27,13 @@ Guards the admission-path invariants cheap enough for every PR:
     ``double_served == 0`` across the evacuation + re-route, and each cell
     must keep <= 1 sync and <= 1 decode dispatch per group per tick
     (churn-flush ticks excepted, same accounting as the chaos drill);
+  * **plane-crash drill** — the same federation under the two-level
+    hierarchy (``control.hierarchy``) with the GLOBAL plane crashed for 6
+    ticks (``plane_down@4:k6``) while retrying clients ramp up: the
+    per-cell controllers must keep taking scale actions inside their
+    leases DURING the outage, the supervisor must reconcile exactly once
+    on restore, the ledger must balance with ``double_served == 0``, and
+    the per-cell sync/dispatch bounds must hold throughout;
   * **sharded fleet parity** — a child process with 4 virtual devices
     (``xla_force_host_platform_device_count=4``; the flag must precede
     jax's backend init, hence the subprocess) runs the same workload
@@ -331,6 +338,77 @@ def main():
     assert mc_steady == 0, \
         "a cell broke the one-sync-per-group bound on a churn-free tick"
     assert max_disp_mc <= 1.0, \
+        "a cell broke the one-decode-dispatch-per-group bound"
+
+    # ---- plane-crash drill: two-level control through a global outage --
+    # the hierarchy's fault-tolerance claim, asserted: with the global
+    # plane dark for 6 ticks the per-cell controllers keep autoscaling
+    # inside their last leases, the restored plane reconciles exactly
+    # once, exactly-once accounting survives, and the device-work bounds
+    # hold per cell
+    from repro.control import (CellController, GlobalPlanner,
+                               PlaneSupervisor)
+
+    mc_h = MultiCellBackend(
+        [mc_cell(0), mc_cell(1)],
+        chaos=ChaosSchedule.parse("plane_down@4:k6"), seed=0)
+    planner = GlobalPlanner(2, total_budget=4, max_per_cell=4,
+                            lease_slack=0.5)
+    ctls = [CellController(mc_h, c, patience=1, cooldown=1)
+            for c in range(2)]
+    sup = PlaneSupervisor(mc_h, planner, ctls, plan_interval=10)
+    pool_h = ClientPool(mc_h, 12, request_factory=cf, think_time=1.0,
+                        timeout=8.0, max_retries=2, spawn_rate=1.0, seed=3)
+    h_steady = 0
+    max_disp_h = max_stale = 0.0
+    for _ in range(20):
+        before = [sum(len(n.live) + len(n.draining) for n in cell.nodes)
+                  for cell in mc_h.cells]
+        pool_h.tick()
+        m = sup.step(0.0)
+        max_stale = max(max_stale, m["plane_staleness"])
+        for cell, n_before in zip(mc_h.cells, before):
+            cm = cell.metrics()
+            if not cm:
+                continue
+            n_after = sum(len(n.live) + len(n.draining)
+                          for n in cell.nodes)
+            over = cm["syncs"] - max(cm["fleet_groups"], 1)
+            if over > 0 and n_after == n_before:
+                h_steady += 1
+            if cm["decode_dispatches"]:
+                max_disp_h = max(max_disp_h, cm["decode_dispatches"]
+                                 / max(cm["fleet_groups"], 1))
+    pool_h.quiesce()
+    mc_h.run_until_drained()
+    pool_h.finalize()
+    led_h = mc_h.ledger
+    s_h = pool_h.summary()
+    dark = set(range(4, 10))
+    dark_actions = sum(1 for ctl in ctls for t in ctl.action_ticks
+                       if t in dark)
+    print(f"[smoke] plane-crash drill: outages={mc_h.plane_outages} "
+          f"dark-ticks={mc_h.plane_outage_ticks} "
+          f"max plane_staleness={max_stale:.0f} "
+          f"local-actions={sup.local_actions()} (in-outage={dark_actions}) "
+          f"restores={sup.restores} plans={len(sup.plan_log)} "
+          f"ok={s_h['ok']} double_served={led_h.double_served} "
+          f"max decode_dispatches/group/cell={max_disp_h:.1f}")
+    assert mc_h.plane_outages == 1 and mc_h.plane_outage_ticks == 6, \
+        "scripted plane crash did not run its course"
+    assert all(ctl.lease is not None for ctl in ctls), \
+        "the planner never granted a lease"
+    assert dark_actions > 0, \
+        "cells must keep autoscaling while the global plane is dark"
+    assert sup.restores == 1, "the restored plane must reconcile once"
+    assert led_h.balanced(), \
+        f"ledger unbalanced through the plane crash: {led_h.balance()}"
+    assert led_h.double_served == 0, \
+        "reconcile double-applied work after the plane restore"
+    assert s_h["ok"] > 0, "no goodput through the plane-crash drill"
+    assert h_steady == 0, \
+        "a cell broke the one-sync-per-group bound on a churn-free tick"
+    assert max_disp_h <= 1.0, \
         "a cell broke the one-decode-dispatch-per-group bound"
 
     # ---- sharded fleet parity (child process: 4 virtual devices) ------

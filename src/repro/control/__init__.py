@@ -5,6 +5,9 @@ from repro.control.backend import ClusterBackend, SimBackend  # noqa: F401
 from repro.control.cells import (  # noqa: F401
     CellRouter, MetricsView, MultiCellBackend,
 )
+from repro.control.hierarchy import (  # noqa: F401
+    CellController, CellLease, GlobalPlanner, PlaneSupervisor,
+)
 from repro.control.plane import (  # noqa: F401
     METHOD_SPECS, ControlPlane, make_autoscaler,
 )

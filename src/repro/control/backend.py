@@ -73,6 +73,31 @@ Single-cell backends (the two above) emit these as identical zeros —
 plane produces nonzero values. The multi-cell backend additionally
 reports ``shed_total``, ``router_weights`` (C,), ``router_pending``
 (parked arrivals when no cell is routable) and ``quarantined`` (C,).
+
+**Hierarchical-control metrics (always on, PR 10).** The two-level
+control split (``repro.control.hierarchy``: per-cell ``CellController``
+autoscalers inside ``GlobalPlanner`` capacity leases, a crash-tolerant
+global plane under ``PlaneSupervisor``) adds three more always-on keys:
+
+  * ``plane_staleness`` — scalar float: consecutive ticks the GLOBAL
+    control plane has been dark (``plane_down@t`` chaos). While nonzero,
+    every cell's feed ages together and the router falls back to
+    confidence-decayed capacity weights — but plane-caused staleness
+    never quarantines a cell (all views aging in lockstep is not
+    evidence any one cell is dark);
+  * ``lease_util`` — (C,) float: each cell's live in-flight replica
+    count over its lease ``max_replicas`` (0 where no lease is set) —
+    how much of the granted headroom the local controllers are using;
+  * ``local_actions`` — scalar float: CellController scale actions taken
+    since the previous tick's metrics (the decentralized half acting; in
+    particular, nonzero DURING an outage is the paper's fault-tolerance
+    claim made measurable).
+
+Single-cell / centralized invocations emit identical zeros
+(``plane_staleness``/``local_actions`` as ``0.0``, ``lease_util`` as
+``np.zeros(1)``) — there is no plane above a lone frontend and no lease
+unless the hierarchy granted one — keeping planner guards shape-stable
+across every backend and control mode.
 """
 from __future__ import annotations
 

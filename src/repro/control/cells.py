@@ -33,6 +33,31 @@ request. Three failure classes are survived end-to-end:
     the top tier), each shed request landing in the explicit ``shed``
     ledger terminal (retryable, never silent loss). Queues stay bounded
     instead of the PR 7 flash-crowd collapse.
+  * **global-plane outage** (``plane_down@t[:kK]`` / ``plane_up@t``, PR
+    10): the whole global control plane — planner, balancer, metrics
+    pipeline — goes dark at once. EVERY cell's feed ages together
+    (``plane_staleness`` counts the dark ticks) and the router rides the
+    same confidence-decayed capacity-weight fallback as a partition, but
+    plane-caused staleness never *quarantines* a cell: quarantine exists
+    to protect against one dark cell among fresh siblings, and when all
+    views age in lockstep the safe local decision is capacity-weighted
+    routing, not parking the federation. Cells keep serving AND — under
+    the two-level hierarchy (``control/hierarchy.py``) — keep autoscaling
+    inside their last granted capacity lease; the global planner's
+    actions are suppressed until ``plane_up``, when the restarted plane
+    reconciles from its checkpoint against live cell state
+    (``PlaneSupervisor.restore``) without double-applying scale actions.
+
+**Lease contract** (PR 10): a capacity lease is a per-cell
+``[min_replicas, max_replicas]`` bound on the cell's TOTAL in-flight
+replica count, granted by the hierarchy's ``GlobalPlanner`` and enforced
+by the cell backends themselves (``set_lease`` on
+``ElasticClusterFrontend`` / ``ClusterSim`` clamps every ``scale_to``) —
+so both the local ``CellController`` and a restored global plane
+replaying a stale plan are bounded by the same authority. During an
+outage the LAST granted lease stays in force: local reactive scaling
+continues inside it at full tick rate (the paper's decentralization
+claim), and nothing can exceed the budget the dead planner granted.
 
 Routing is additionally biased away from *doomed* cells before a blackout
 lands: per-node ``preempt_risk`` aggregates to a per-cell risk score and
@@ -120,19 +145,27 @@ class CellRouter:
         self.shed_threshold = shed_threshold
         self.adaptive = adaptive      # False = static split (the A/B arm)
 
-    def healthy(self, views: list, alive: np.ndarray) -> np.ndarray:
+    def healthy(self, views: list, alive: np.ndarray,
+                plane_staleness: int = 0) -> np.ndarray:
+        """Alive and not quarantined. ``plane_staleness`` is subtracted
+        from each view's clock before the quarantine check: staleness the
+        whole federation shares (global plane down) is not evidence that
+        ONE cell is dark — quarantining everything would park all traffic
+        during an outage the cells themselves are healthy through."""
         return np.asarray(
-            [bool(alive[c]) and not views[c].quarantined(self.max_staleness)
+            [bool(alive[c]) and max(
+                views[c].staleness - int(plane_staleness), 0)
+                <= self.max_staleness
              for c in range(len(views))], bool)
 
     def weights(self, fractions: np.ndarray, views: list,
-                alive: np.ndarray) -> np.ndarray:
+                alive: np.ndarray, plane_staleness: int = 0) -> np.ndarray:
         c_n = len(views)
         if not self.adaptive:
             # routing disabled: a fixed uniform split that ignores health,
             # staleness and risk — the ablation baseline the bench A/Bs
             return np.full(c_n, 1.0 / c_n, np.float64)
-        healthy = self.healthy(views, alive)
+        healthy = self.healthy(views, alive, plane_staleness)
         cap = np.asarray([max(v.snap.get("capacity", 0.0), 0.0)
                           for v in views], np.float64)
         total_cap = max(cap[healthy].sum(), 1e-9) if healthy.any() else 1e-9
@@ -151,11 +184,12 @@ class CellRouter:
         w = w * np.clip(1.0 - self.risk_bias * risk, 0.0, 1.0)
         return normalize_fractions(w, mask=healthy.astype(np.float64))
 
-    def shed_tiers(self, views: list, alive: np.ndarray) -> frozenset:
+    def shed_tiers(self, views: list, alive: np.ndarray,
+                   plane_staleness: int = 0) -> frozenset:
         if self.shed_threshold is None or len(self.tiers) <= 1 \
                 or not self.adaptive:
             return frozenset()
-        healthy = self.healthy(views, alive)
+        healthy = self.healthy(views, alive, plane_staleness)
         if not healthy.any():
             return frozenset()        # full blackout: park, don't shed
         ppc = [views[c].snap.get("pressure", 0.0)
@@ -224,6 +258,17 @@ class MultiCellBackend:
         self.evacuated_total = 0
         self.cell_downs = 0
         self.quarantine_ticks = 0
+        # global-plane liveness (PR 10): 0 = up, >0 = ticks of outage left,
+        # _INDEFINITE = down until an explicit plane_up. While down, every
+        # view ages together and plane_staleness counts the dark ticks.
+        self._plane_left = 0
+        self._plane_stale = 0
+        self.plane_outages = 0
+        self.plane_outage_ticks = 0
+        # hierarchy bookkeeping: CellControllers report their scale actions
+        # here (note_local_action) so the federation metrics expose them
+        self._local_actions_acc = 0
+        self.local_actions_total = 0
         self._fluid_backlog = 0.0              # evacuated fluid work mass
         self._live_m: list = [{} for _ in self.cells]
         self.views = [MetricsView(*self._snapshot(c))
@@ -395,10 +440,48 @@ class MultiCellBackend:
         self.cells[c].restore()
         self._alive[c] = True
 
+    # ------------------------------------------------------ plane lifecycle
+    @property
+    def plane_alive(self) -> bool:
+        return self._plane_left == 0
+
+    def plane_down(self, ticks: Optional[int] = None) -> None:
+        """Crash the global control plane: from this tick until restore the
+        metrics feed of EVERY cell goes dark together (views age,
+        ``plane_staleness`` climbs) and any driver honoring the contract
+        suppresses global planning/balancing/scaling. ``ticks`` bounds the
+        outage (``plane_down@t:kK``); ``None`` lasts until ``plane_up``."""
+        if self._plane_left != 0:
+            raise ValueError("global plane is already down")
+        self._plane_left = _INDEFINITE if ticks is None else int(ticks)
+        if self._plane_left == 0:     # k0 is a no-op crash, not an error
+            return
+        self.plane_outages += 1
+
+    def plane_up(self) -> None:
+        """Restart the global plane: feeds refresh on the next tick and
+        ``plane_staleness`` resets. The hierarchy's ``PlaneSupervisor``
+        observes the transition and reconciles from its checkpoint."""
+        if self._plane_left == 0:
+            raise ValueError("global plane is not down")
+        self._plane_left = 0
+
+    def note_local_action(self, n: int = 1) -> None:
+        """CellControllers report local scale actions for the federation's
+        ``local_actions`` metric (and the cumulative total)."""
+        self._local_actions_acc += int(n)
+        self.local_actions_total += int(n)
+
     def _advance_chaos(self):
         if self.chaos is None:
             return
         for kind, c, arg in self.chaos.pop(self.t):
+            if kind in ChaosSchedule.PLANE_KINDS:
+                if kind == "plane_down":
+                    self.plane_down(arg)
+                else:
+                    self.plane_up()
+                continue
             if kind not in ChaosSchedule.CELL_KINDS:
                 continue              # node-kind events belong to the cells
             self._check_cell(c)
@@ -462,8 +545,8 @@ class MultiCellBackend:
 
     # ------------------------------------------------- ClusterBackend API
     def up_mask(self) -> np.ndarray:
-        return self.router.healthy(self.views, self._alive) \
-            .astype(np.float32)
+        return self.router.healthy(self.views, self._alive,
+                                   self._plane_stale).astype(np.float32)
 
     def queue_depths(self) -> np.ndarray:
         return np.asarray([v.snap["queue"] for v in self.views], np.float32)
@@ -511,42 +594,66 @@ class MultiCellBackend:
 
     def scale_to(self, target: np.ndarray) -> None:
         """Per-cell replica totals, split evenly across each cell's
-        schedulable nodes (dead / doomed nodes and dead cells skipped)."""
+        schedulable nodes (dead / doomed nodes and dead cells skipped).
+        Cells under a capacity lease clamp their own total
+        (``set_lease``)."""
         target = np.asarray(target)
-        for c, cell in enumerate(self.cells):
-            if not self._alive[c]:
-                continue
-            tgt = max(int(target[c]), 0)
-            if self._elastic[c]:
-                ok = [i for i, nd in enumerate(cell.nodes)
-                      if not nd.down and nd.preempt_left < 0]
-                if not ok:
-                    continue
-                per = np.zeros(cell.num_nodes, np.int32)
-                base, rem = divmod(tgt, len(ok))
-                for j, i in enumerate(ok):
-                    per[i] = base + (1 if j < rem else 0)
-                cell.scale_to(per)
-            else:
-                s = cell.state
-                ok = [i for i in range(cell.cfg.num_nodes)
-                      if not cell._preempt_down[i] and s.notice_left[i] < 0]
-                if not ok:
-                    continue
-                per = (s.active + s.pending.sum(axis=1)).copy()
-                base, rem = divmod(tgt, len(ok))
-                for j, i in enumerate(ok):
-                    per[i] = base + (1 if j < rem else 0)
-                cell.scale_to(per)
+        for c in range(self.n_cells):
+            self.scale_cell(c, int(target[c]))
+
+    def scale_cell(self, c: int, tgt: int) -> None:
+        """Scale ONE cell to a total replica count (the hierarchy's
+        ``CellController`` entry point: local actions touch only their own
+        cell). Splits evenly across the cell's schedulable nodes; the
+        cell's own lease clamp applies."""
+        self._check_cell(c)
+        if not self._alive[c]:
+            return
+        cell = self.cells[c]
+        tgt = max(int(tgt), 0)
+        if tgt == self.cell_in_flight(c):
+            return                     # no total change: never reshuffle
+        if self._elastic[c]:
+            ok = [i for i, nd in enumerate(cell.nodes)
+                  if not nd.down and nd.preempt_left < 0]
+            if not ok:
+                return
+            per = np.zeros(cell.num_nodes, np.int32)
+            base, rem = divmod(tgt, len(ok))
+            for j, i in enumerate(ok):
+                per[i] = base + (1 if j < rem else 0)
+            cell.scale_to(per)
+        else:
+            s = cell.state
+            ok = [i for i in range(cell.cfg.num_nodes)
+                  if not cell._preempt_down[i] and s.notice_left[i] < 0]
+            if not ok:
+                return
+            per = (s.active + s.pending.sum(axis=1)).copy()
+            base, rem = divmod(tgt, len(ok))
+            for j, i in enumerate(ok):
+                per[i] = base + (1 if j < rem else 0)
+            cell.scale_to(per)
+
+    def cell_in_flight(self, c: int) -> int:
+        """Live total in-flight replicas of ONE cell (local, never stale —
+        what a CellController may legitimately observe at tick rate)."""
+        self._check_cell(c)
+        cell = self.cells[c]
+        if self._elastic[c]:
+            return int(cell.in_flight().sum())
+        s = cell.state
+        return int((s.active + s.pending.sum(axis=1)).sum())
 
     # ---------------------------------------------------------------- tick
     def tick(self, arrival_rate: float = 0.0) -> dict:
         self.t += 1
         self._advance_chaos()
-        w = self.router.weights(self._fractions, self.views, self._alive)
+        w = self.router.weights(self._fractions, self.views, self._alive,
+                                self._plane_stale)
         self._weights = w
-        self._shed_now = shed = self.router.shed_tiers(self.views,
-                                                       self._alive)
+        self._shed_now = shed = self.router.shed_tiers(
+            self.views, self._alive, self._plane_stale)
         self._generate_arrivals(arrival_rate, w)
         self._distribute(w, shed)
         # fluid share: routed rate mass + re-injected evacuated backlog
@@ -560,6 +667,16 @@ class MultiCellBackend:
                     fluid_extra[c] = self._fluid_backlog * share[j] \
                         / max(self.tick_seconds, 1e-9)
                 self._fluid_backlog = 0.0
+        # a dark plane ages EVERY feed together (plane_staleness), on top
+        # of any per-cell partition still running its own clock
+        plane_dark = self._plane_left != 0
+        if plane_dark:
+            self._plane_stale += 1
+            self.plane_outage_ticks += 1
+            if self._plane_left > 0:
+                self._plane_left -= 1
+        else:
+            self._plane_stale = 0
         for c, cell in enumerate(self.cells):
             if self._elastic[c]:
                 # intra-cell routing: reactive weighted-capacity over the
@@ -574,20 +691,33 @@ class MultiCellBackend:
                 self._live_m[c] = cell.tick(rate, fr)
             # feed update: partitioned cells age instead (their live
             # metrics exist — the plane just can't see them)
-            if self._partition[c] != 0:
+            if plane_dark or self._partition[c] != 0:
                 self.views[c].age()
                 if self._partition[c] > 0:
                     self._partition[c] -= 1
             else:
                 self.views[c].update(*self._snapshot(c))
+        healthy = self.router.healthy(self.views, self._alive,
+                                      self._plane_stale)
         self.quarantine_ticks += int(
             sum(1 for c in range(self.n_cells)
-                if self._alive[c]
-                and self.views[c].quarantined(self.router.max_staleness)))
+                if self._alive[c] and not healthy[c]))
         self._m = self._aggregate(arrival_rate)
         return self._m
 
     # ------------------------------------------------------------- metrics
+    def _lease_util(self) -> np.ndarray:
+        util = np.zeros(self.n_cells, np.float32)
+        for c, cell in enumerate(self.cells):
+            lease = getattr(cell, "lease", None)
+            if lease is not None and lease[1] > 0:
+                util[c] = self.cell_in_flight(c) / float(lease[1])
+        return util
+
+    def _take_local_actions(self) -> int:
+        n, self._local_actions_acc = self._local_actions_acc, 0
+        return n
+
     def _aggregate(self, arrival_rate: float) -> dict:
         """Federation metrics. Plane-facing ARRAYS come from the views
         (honest staleness); scalar accounting counters (served / goodput /
@@ -650,8 +780,16 @@ class MultiCellBackend:
             "router_weights": self._weights.copy(),
             "router_pending": len(self.pending),
             "quarantined": np.asarray(
-                [float(self.views[c].quarantined(self.router.max_staleness))
+                [float(max(self.views[c].staleness - self._plane_stale, 0)
+                       > self.router.max_staleness)
                  for c in range(self.n_cells)], np.float32),
+            # hierarchical-control view (PR 10): plane-outage clock, lease
+            # utilization (live in-flight over lease max, 0 when no lease)
+            # and this tick's CellController scale actions — all zero in
+            # centralized mode, so planner guards stay shape-stable
+            "plane_staleness": float(self._plane_stale),
+            "lease_util": self._lease_util(),
+            "local_actions": float(self._take_local_actions()),
         }
         rates = [c.service_rate for e, c in zip(self._elastic, self.cells)
                  if e and c.service_rate]
@@ -683,6 +821,8 @@ class MultiCellBackend:
         safety)."""
         chaos, self.chaos = self.chaos, None
         self._partition[:] = 0
+        self._plane_left = 0          # a drain is a controlled wind-down:
+        self._plane_stale = 0         # the plane outage ends with the run
         try:
             for _ in range(max_steps):
                 if self._outstanding() == 0:

@@ -25,9 +25,29 @@ state as of one tick earlier — scaling rules tolerate that lag by design
 (production autoscalers poll far staler signals); the eager backend mode
 (``async_tick=False``) restores synchronous observation when exact
 sim-parity of the control trajectory matters.
+
+**Two-level hierarchy and crash tolerance** (PR 10, see
+``control/hierarchy.py``): under ``PlaneSupervisor`` this plane is the
+GLOBAL half of a two-level loop — it forecasts and balances, while
+scaling authority is delegated as per-cell capacity leases
+(``[min, max]`` total-replica bounds, enforced by the cell backends'
+``set_lease``) that a ``GlobalPlanner`` re-grants every
+``plan_interval`` ticks and per-cell ``CellController``s act inside at
+full tick rate. The plane is crash-tolerant through
+``state_dict``/``load_state_dict``: the checkpoint carries every piece
+of mutable decision state (forecast window, residual tracker, learned
+fractions, tick counter, scaler internals), so a restarted process that
+loads it continues the exact decision stream. During an outage
+(``plane_down@t`` chaos) ``step`` must not run — the supervisor ticks
+the backend directly, cells keep scaling inside their LAST lease, and
+the router rides the confidence-decayed capacity fallback; on
+``plane_up`` the supervisor restores the checkpoint and re-plans leases
+from live cell state instead of replaying pre-crash targets (no
+double-applied scale actions).
 """
 from __future__ import annotations
 
+import copy
 from typing import Optional
 
 import jax
@@ -104,6 +124,31 @@ class ControlPlane:
         self._prev = None            # (obs, action, reward) for RL replay
         self._resid = np.zeros(64, np.float32)   # rolling forecast residuals
         self._prev_fc1 = None
+
+    # -------------------------------------------------- checkpoint/restore
+    def state_dict(self) -> dict:
+        """Deep-copied snapshot of every piece of mutable decision state —
+        loading it into a FRESH plane over the same backend continues the
+        exact decision stream (asserted in ``tests/test_hierarchy.py``).
+        The RL replay tuple is transient (one tick of context) and resets
+        on restore; the rl balancer itself is externally owned."""
+        return {
+            "t": int(self.t),
+            "window": self.window.copy(),
+            "fractions": self.fractions.copy(),
+            "resid": self._resid.copy(),
+            "prev_fc1": self._prev_fc1,
+            "scaler": copy.deepcopy(self.scaler),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.t = int(state["t"])
+        self.window = state["window"].copy()
+        self.fractions = state["fractions"].copy()
+        self._resid = state["resid"].copy()
+        self._prev_fc1 = state["prev_fc1"]
+        self.scaler = copy.deepcopy(state["scaler"])
+        self._prev = None
 
     # ------------------------------------------------------------ forecast
     def _forecast(self, arrival_rate: float) -> np.ndarray:

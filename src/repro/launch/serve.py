@@ -54,6 +54,19 @@ lands on cell 0); ``--shed-threshold X`` arms total-overload admission
 shedding (lowest tiers first, explicit ``shed`` ledger terminal);
 ``--static-split`` is the A/B arm that routes a fixed uniform split.
 
+Hierarchy flags (PR 10): ``--hierarchy`` splits control in two —
+per-cell ``CellController`` autoscalers act every tick inside capacity
+leases that a ``GlobalPlanner`` re-grants every
+``--plan-interval-global`` ticks with ``--lease-slack`` headroom, all
+under a crash-tolerant ``PlaneSupervisor`` (the ``ControlPlane`` runs
+forecast+balance only; scaling authority belongs to the leases).
+``--cell-chaos 'plane_down@10:k6'`` crashes the GLOBAL plane: the
+centralized loop freezes (no planning, no balancing) while the
+hierarchical loop keeps autoscaling locally inside the last leases —
+the A/B that ``benchmarks/serve_bench.py`` measures as scale-reaction
+latency. ``slow@t:nI:xF`` in ``--chaos`` pins a deterministic straggler
+(node I at 1/F speed until ``x1`` clears it).
+
 Device scaling: ``--devices N`` shards every fleet group's slab over an
 N-way ``('fleet',)`` mesh so F replicas decode on N devices in parallel
 (same one-logical-dispatch / one-sync tick; bit-identical streams). On a
@@ -93,7 +106,9 @@ def _parse_timeout(spec: str):
 
 def run_control_loop(args, cfg, model, params, mesh=None):
     from repro.configs.paper_cluster import ClusterConfig
-    from repro.control import CellRouter, ControlPlane, MultiCellBackend
+    from repro.control import (CellController, CellRouter, ControlPlane,
+                               GlobalPlanner, MultiCellBackend,
+                               PlaneSupervisor)
     from repro.core import balancer as bal
     from repro.serving import (ChaosSchedule, ElasticClusterFrontend,
                                ReplicaEngine, Request)
@@ -102,6 +117,9 @@ def run_control_loop(args, cfg, model, params, mesh=None):
 
     tiers = parse_tiers(args.tiers)
     multi = args.cells > 1
+    if args.hierarchy and not multi:
+        raise SystemExit("--hierarchy needs --cells > 1 (the two-level "
+                         "split is over a federation of cells)")
     # multi-cell: the plane sees CELLS as nodes; a scale target is the
     # cell's total replica budget, so the per-"node" cap scales with the
     # cell's own node count
@@ -185,16 +203,32 @@ def run_control_loop(args, cfg, model, params, mesh=None):
                                        diurnal_period=max(args.ticks, 2)),
                            seed=args.seed)
     arrivals = trace["arrivals"]
+    # hierarchy mode: the ControlPlane keeps forecast + balance, but
+    # scaling authority moves to the per-cell controllers under leases
     plane = ControlPlane(ccfg, fe, balancer=balancer,
-                         scaler=args.autoscale, unit_capacity=unit_cap,
+                         scaler="none" if args.hierarchy
+                         else args.autoscale,
+                         unit_capacity=unit_cap,
                          rl=rl, forecast_scale=float(arrivals.mean()),
                          seed=args.seed,
                          init_arrival=float(arrivals[:5].mean()))
+    sup = None
+    if args.hierarchy:
+        cell_cap = args.nodes * args.max_replicas
+        planner = GlobalPlanner(args.cells,
+                                total_budget=args.cells * cell_cap,
+                                max_per_cell=cell_cap,
+                                lease_slack=args.lease_slack)
+        controllers = [CellController(fe, c) for c in range(args.cells)]
+        sup = PlaneSupervisor(fe, planner, controllers, plane=plane,
+                              plan_interval=args.plan_interval_global)
 
     print(f"[serve] unified loop: balancer={balancer} "
           f"autoscale={args.autoscale} nodes={args.nodes} "
           f"ticks={args.ticks}"
           + (f" cells={args.cells}" if multi else "")
+          + (" hierarchy=on"
+             f" plan-interval={args.plan_interval_global}" if sup else "")
           + (f" clients={args.clients}" if pool else "")
           + (f" chaos={args.chaos!r}" if chaos else "")
           + (f" cell-chaos={args.cell_chaos!r}"
@@ -203,7 +237,15 @@ def run_control_loop(args, cfg, model, params, mesh=None):
     for t in range(args.ticks):
         if pool is not None:
             pool.tick()                     # closed loop drives arrivals
-        m = plane.step(0.0 if pool is not None else float(arrivals[t]))
+        rate = 0.0 if pool is not None else float(arrivals[t])
+        if sup is not None:
+            m = sup.step(rate)
+        elif getattr(fe, "plane_alive", True):
+            m = plane.step(rate)
+        else:
+            # centralized baseline under a plane outage: the one brain is
+            # gone — tick the data plane, no planning/balancing/scaling
+            m = fe.tick(rate)
         if t % 10 == 0 or t == args.ticks - 1:
             print(f"[serve] t={t:3d} arrivals={arrivals[t]:5.1f}/tick "
                   f"replicas={m['active_replicas'].tolist()} "
@@ -230,15 +272,20 @@ def run_control_loop(args, cfg, model, params, mesh=None):
           f"prefill-dispatches={fe.prefill_dispatches()} "
           f"syncs={fe.sync_count()} "
           f"sync-wait={fe.sync_wait_s():.2f}s")
-    if done:
-        ttft = _percentiles([r.first_token_time - r.arrival for r in done])
-        lat = _percentiles([r.finish_time - r.arrival for r in done])
+    # queue-culled deadline expiries land in fe.finished with NO first
+    # token (ledger resolves them timed-out) — latency stats are over
+    # requests that were actually served
+    served = [r for r in done if r.first_token_time is not None]
+    if served:
+        ttft = _percentiles([r.first_token_time - r.arrival
+                             for r in served])
+        lat = _percentiles([r.finish_time - r.arrival for r in served])
         print(f"[serve] TTFT p50={ttft[0]:.1f} p95={ttft[1]:.1f} ticks; "
               f"latency p50={lat[0]:.1f} p95={lat[1]:.1f} ticks; "
               f"prefill retraces={traces}")
         if len(tiers) > 1:
             for spec in tiers.specs:
-                sub = [r for r in done if tiers.index(r.tier)
+                sub = [r for r in served if tiers.index(r.tier)
                        == tiers.index(spec.name)]
                 if not sub:
                     continue
@@ -282,6 +329,18 @@ def run_control_loop(args, cfg, model, params, mesh=None):
               f"quarantine-ticks={fe.quarantine_ticks} "
               f"parked={len(fe.pending)} staleness={stale} "
               f"weights={np.round(fe._weights, 3).tolist()}")
+        if fe.plane_outages:
+            print(f"[serve] plane: outages={fe.plane_outages} "
+                  f"dark-ticks={fe.plane_outage_ticks} "
+                  f"local-actions={fe.local_actions_total}")
+        if sup is not None:
+            hs = sup.summary()
+            print(f"[serve] hierarchy: plans={hs['plans']} "
+                  f"local-actions={hs['local_actions']} "
+                  f"(up={hs['local_up_actions']}) "
+                  f"outage-steps={hs['outage_steps']} "
+                  f"restores={hs['restores']} "
+                  f"leases={hs['leases']}")
     if pool is not None:
         s = pool.summary()
         lm = s["latency_mean"]
@@ -387,8 +446,10 @@ def main():
                          "rows are dropped (spot semantics)")
     ap.add_argument("--chaos", default="",
                     help="deterministic fault script, e.g. "
-                         "'preempt@12:n0:k3,fail@8:n1:r0,recover@40:n0' "
-                         "(multi-cell: node events land on cell 0)")
+                         "'preempt@12:n0:k3,fail@8:n1:r0,recover@40:n0,"
+                         "slow@5:n0:x4' (slow = straggler at 1/F speed "
+                         "until 'x1' clears; multi-cell: node events land "
+                         "on cell 0)")
     ap.add_argument("--cells", type=int, default=1,
                     help="federate N elastic cells behind the multi-cell "
                          "routing plane (control mode; 1 = single cell, "
@@ -396,7 +457,21 @@ def main():
     ap.add_argument("--cell-chaos", default="",
                     help="cell-level fault script for the routing plane, "
                          "e.g. 'cell_down@15:c0,partition@10:c1:k6,"
-                         "cell_up@30:c0'")
+                         "cell_up@30:c0'; 'plane_down@10:k6'/'plane_up@20' "
+                         "crash/restart the GLOBAL control plane")
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="two-level control (needs --cells > 1): per-cell "
+                         "reactive autoscalers inside GlobalPlanner "
+                         "capacity leases under a crash-tolerant "
+                         "PlaneSupervisor; the ControlPlane keeps "
+                         "forecast+balance only")
+    ap.add_argument("--plan-interval-global", type=int, default=10,
+                    help="ticks between GlobalPlanner lease re-plans "
+                         "(hierarchy mode)")
+    ap.add_argument("--lease-slack", type=float, default=0.5,
+                    help="lease headroom fraction above/below the planner "
+                         "budget for local controllers to react into "
+                         "(hierarchy mode)")
     ap.add_argument("--shed-threshold", type=float, default=0.0,
                     help="total-overload admission shedding: when every "
                          "healthy cell's tier pressure per unit capacity "
@@ -479,7 +554,11 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed), jnp.float32)
     print(f"[serve] arch={cfg.name} policy={args.policy}")
 
-    control_mode = args.policy == "ours" or (args.autoscale or "none") != "none"
+    # --cells/--hierarchy only exist in the control loop: requesting them
+    # must not silently fall through to the legacy drain mode
+    control_mode = (args.policy == "ours"
+                    or (args.autoscale or "none") != "none"
+                    or args.cells > 1 or args.hierarchy)
     if control_mode:
         if args.autoscale is None:
             args.autoscale = "gpso" if args.policy == "ours" else "none"

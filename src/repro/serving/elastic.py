@@ -281,39 +281,53 @@ class RequestLedger:
 
 
 class ChaosSchedule:
-    """Deterministic scripted chaos: fail / preempt / recover events keyed
-    by tick, plus cell-level events for the multi-cell routing plane
-    (``control.cells.MultiCellBackend``). Spec syntax (comma-separated)::
+    """Deterministic scripted chaos: fail / preempt / recover / slow events
+    keyed by tick, plus cell-level events for the multi-cell routing plane
+    (``control.cells.MultiCellBackend``) and plane-level events for the
+    two-level control hierarchy (``control.hierarchy``). Spec syntax
+    (comma-separated)::
 
         preempt@12:n0:k3   # tick 12: preemption notice on node 0, K=3
         preempt@20:n1      # frontend-default notice
         fail@8:n1:r0       # tick 8: kill node 1's live replica 0
         fail@9:n0          # replica 0 by default
         recover@40:n0      # tick 40: bring node 0 back from 'down'
+        slow@6:n1:x4       # tick 6: node 1's replicas run at 1/4 speed
+        slow@18:n1:x1      # x1 clears the straggler (full speed again)
         cell_down@15:c0    # tick 15: blackout cell 0 (evacuate + re-route)
         cell_up@30:c0      # tick 30: restore cell 0 (provisioning applies)
         partition@10:c1:k6 # tick 10: cell 1's metrics feed stale for 6 ticks
         heal@14:c1         # end cell 1's partition early
+        plane_down@12:k8   # tick 12: global control plane crashes, 8 ticks
+        plane_down@12      # ...or until an explicit plane_up
+        plane_up@20        # tick 20: global plane restarts (from checkpoint)
 
     Node-kind events are consumed by the backends' own ``_advance_chaos``
-    (elastic frontend / fluid sim); cell-kind events are consumed by the
-    routing plane. ``pop`` is non-destructive, so one schedule can feed
-    both consumers — each filters to the kinds it owns. Events validate at
-    parse time (syntax) and again when applied (indices and liveness)."""
+    (elastic frontend / fluid sim); cell- and plane-kind events are
+    consumed by the routing plane. ``pop`` is non-destructive, so one
+    schedule can feed both consumers — each filters to the kinds it owns.
+    Plane events carry no target index (the global plane is a singleton);
+    they are stored with index -1. Events validate at parse time (syntax)
+    and again when applied (indices and liveness)."""
 
-    NODE_KINDS = ("preempt", "fail", "recover")
+    NODE_KINDS = ("preempt", "fail", "recover", "slow")
     CELL_KINDS = ("cell_down", "cell_up", "partition", "heal")
+    PLANE_KINDS = ("plane_down", "plane_up")
 
     _EVENT = re.compile(
-        r"^(?P<kind>preempt|fail|recover|cell_down|cell_up|partition|heal)"
+        r"^(?P<kind>preempt|fail|recover|slow|cell_down|cell_up|partition"
+        r"|heal)"
         r"@(?P<tick>\d+):(?P<scope>[nc])(?P<idx>\d+)"
-        r"(?::(?P<argkind>[kr])(?P<arg>\d+))?$")
+        r"(?::(?P<argkind>[krx])(?P<arg>\d+))?$")
+    _PLANE = re.compile(
+        r"^(?P<kind>plane_down|plane_up)@(?P<tick>\d+)(?::k(?P<arg>\d+))?$")
 
     def __init__(self):
         self.events: dict = {}       # tick -> [(kind, node_or_cell, arg|None)]
 
-    def add(self, tick: int, kind: str, node: int, arg: Optional[int] = None):
-        if kind not in self.NODE_KINDS + self.CELL_KINDS:
+    def add(self, tick: int, kind: str, node: int = -1,
+            arg: Optional[int] = None):
+        if kind not in self.NODE_KINDS + self.CELL_KINDS + self.PLANE_KINDS:
             raise ValueError(f"unknown chaos event kind {kind!r}")
         self.events.setdefault(int(tick), []).append((kind, int(node), arg))
         return self
@@ -322,13 +336,22 @@ class ChaosSchedule:
     def parse(cls, spec: str) -> "ChaosSchedule":
         sched = cls()
         for part in filter(None, (p.strip() for p in spec.split(","))):
+            p = cls._PLANE.match(part)
+            if p is not None:
+                if p["kind"] == "plane_up" and p["arg"] is not None:
+                    raise ValueError(
+                        f"{part!r}: ':k' only applies to plane_down")
+                sched.add(int(p["tick"]), p["kind"], -1,
+                          int(p["arg"]) if p["arg"] is not None else None)
+                continue
             m = cls._EVENT.match(part)
             if m is None:
                 raise ValueError(
                     f"bad chaos event {part!r} — expected "
                     "'preempt@T:nN[:kK]', 'fail@T:nN[:rR]', 'recover@T:nN', "
-                    "'cell_down@T:cC', 'cell_up@T:cC', 'partition@T:cC[:kK]' "
-                    "or 'heal@T:cC'")
+                    "'slow@T:nN:xF', 'cell_down@T:cC', 'cell_up@T:cC', "
+                    "'partition@T:cC[:kK]', 'heal@T:cC', "
+                    "'plane_down@T[:kK]' or 'plane_up@T'")
             kind, scope, argkind = m["kind"], m["scope"], m["argkind"]
             want = "c" if kind in cls.CELL_KINDS else "n"
             if scope != want:
@@ -340,6 +363,11 @@ class ChaosSchedule:
                     f"{part!r}: ':k' only applies to preempt/partition")
             if argkind == "r" and kind != "fail":
                 raise ValueError(f"{part!r}: ':r' only applies to fail")
+            if argkind == "x" and kind != "slow":
+                raise ValueError(f"{part!r}: ':x' only applies to slow")
+            if kind == "slow" and argkind != "x":
+                raise ValueError(
+                    f"{part!r}: slow needs a ':xF' factor (x1 clears)")
             sched.add(int(m["tick"]), kind, int(m["idx"]),
                       int(m["arg"]) if m["arg"] is not None else None)
         return sched
@@ -350,7 +378,7 @@ class ChaosSchedule:
 
 class _Node:
     __slots__ = ("live", "draining", "spawning", "queue", "credit",
-                 "preempt_left", "down")
+                 "preempt_left", "down", "slow")
 
     def __init__(self, tiers: TierSet):
         self.live: list = []        # serving ReplicaEngines
@@ -362,6 +390,7 @@ class _Node:
         self.credit: dict = {}      # engine id -> fractional step credit
         self.preempt_left = -1      # ticks of preemption notice left; -1=none
         self.down = False           # preempted away; needs recover_node
+        self.slow = 1.0             # straggler speed factor (slow@t:nI:xF)
 
     def unfinished(self) -> int:
         return len(self.queue) + sum(e.load for e in self.live) + \
@@ -428,6 +457,7 @@ class ElasticClusterFrontend:
         # same state machine — double_served stays 0 federation-wide)
         self.ledger = RequestLedger() if ledger is None else ledger
         self._blackout_profile: Optional[list] = None
+        self._lease: Optional[tuple] = None   # (min, max) total replicas
         self._tick_goodput = 0        # this tick's in-deadline completions
         self._tick_timed_out = 0      # this tick's expired completions
         self._fractions = np.full(num_nodes, 1.0 / num_nodes, np.float32)
@@ -601,9 +631,11 @@ class ElasticClusterFrontend:
         return np.asarray([n.unfinished() for n in self.nodes], np.float32)
 
     def capacity(self) -> np.ndarray:
-        """Decode slots/tick per node (live replicas only)."""
+        """Decode slots/tick per node (live replicas only, scaled by the
+        node's straggler factor)."""
         return np.asarray(
-            [sum(e.max_batch * e.speed for e in n.live) for n in self.nodes],
+            [sum(e.max_batch * e.speed for e in n.live) * n.slow
+             for n in self.nodes],
             np.float32)
 
     def request_capacity(self) -> np.ndarray:
@@ -617,7 +649,7 @@ class ElasticClusterFrontend:
     @property
     def node_speed(self) -> np.ndarray:
         return np.asarray(
-            [np.mean([e.speed for e in n.live]) if n.live else 1.0
+            [(np.mean([e.speed for e in n.live]) if n.live else 1.0) * n.slow
              for n in self.nodes], np.float32)
 
     def observe(self, forecast: np.ndarray) -> np.ndarray:
@@ -641,13 +673,68 @@ class ElasticClusterFrontend:
     def metrics(self) -> dict:
         return self._m
 
+    def set_lease(self, min_replicas: int, max_replicas: int) -> None:
+        """Bound every future ``scale_to`` to a capacity lease: the cell's
+        TOTAL in-flight replica count (live + spawning, across nodes) is
+        clamped into ``[min_replicas, max_replicas]``. Granted by the
+        hierarchy's ``GlobalPlanner`` (see ``control/hierarchy.py``); the
+        clamp holds even when the global plane itself issues the target,
+        so a restored plane replaying a stale plan cannot overshoot the
+        lease. ``set_lease(None)``-style clearing is spelled
+        ``clear_lease()``."""
+        lo, hi = int(min_replicas), int(max_replicas)
+        if lo < 0 or hi < lo:
+            raise ValueError(f"bad lease [{min_replicas}, {max_replicas}]")
+        self._lease = (lo, hi)
+
+    def clear_lease(self) -> None:
+        self._lease = None
+
+    @property
+    def lease(self):
+        return self._lease
+
+    def _apply_lease(self, desired: dict) -> dict:
+        """Clamp the requested per-node targets so the cell total lands in
+        the lease. Trims largest-target-first, raises smallest-first
+        (deterministic tie-break on node index); replicas held by doomed
+        nodes (skipped by ``scale_to``) count against the lease."""
+        if self._lease is None or not desired:
+            return desired
+        lo, hi = self._lease
+        held = sum(len(n.live) + len(n.spawning)
+                   for i, n in enumerate(self.nodes) if i not in desired)
+        total = sum(desired.values()) + held
+        while total > hi:
+            i = max(desired, key=lambda j: (desired[j], -j))
+            if desired[i] == 0:
+                break
+            desired[i] -= 1
+            total -= 1
+        while total < lo:
+            room = [j for j in desired
+                    if desired[j] < self.max_replicas_per_node]
+            if not room:
+                break
+            i = min(room, key=lambda j: (desired[j], j))
+            desired[i] += 1
+            total += 1
+        return desired
+
     def scale_to(self, target: np.ndarray) -> None:
-        """Adds go through cold-start provisioning; removals drain first."""
+        """Adds go through cold-start provisioning; removals drain first.
+        When a capacity lease is set (``set_lease``) the cell total is
+        clamped into it before any node-level action."""
         target = np.asarray(target)
+        desired = {}
         for i, node in enumerate(self.nodes):
             if node.down or node.preempt_left >= 0:
                 continue              # never spawn onto a doomed/dead node
-            tgt = int(np.clip(target[i], 0, self.max_replicas_per_node))
+            desired[i] = int(np.clip(target[i], 0,
+                                     self.max_replicas_per_node))
+        desired = self._apply_lease(desired)
+        for i, tgt in desired.items():
+            node = self.nodes[i]
             in_flight = len(node.live) + len(node.spawning)
             if tgt > in_flight:
                 node.spawning.extend(
@@ -729,6 +816,24 @@ class ElasticClusterFrontend:
             raise ValueError(f"node n{node_idx} is not down")
         node.down = False
 
+    def slow_node(self, node_idx: int, factor: int):
+        """Deterministic straggler injection (``slow@t:nI:xF``): every
+        replica on the node runs at 1/``factor`` speed — capacity,
+        ``node_speed`` and per-tick step credit all scale down, so the
+        router shifts work away and the autoscaler sees the lost
+        throughput. ``factor == 1`` clears the straggler. Persists across
+        replica churn (the factor lives on the node, not the engines)."""
+        node = self._check_node(node_idx)
+        if factor is None or not isinstance(factor, (int, np.integer)):
+            raise ValueError(
+                f"slow factor must be an int >= 1, got {factor!r}")
+        if factor < 1:
+            raise ValueError(f"slow factor must be >= 1, got {factor}")
+        if node.down:
+            raise ValueError(
+                f"node n{node_idx} is down (preempted); nothing to slow")
+        node.slow = 1.0 / int(factor)
+
     def blackout(self) -> list:
         """Cell blackout (the multi-cell routing plane's evacuation hook):
         hard-drop the ENTIRE cell now. Every node — healthy, under notice,
@@ -795,6 +900,8 @@ class ElasticClusterFrontend:
                     self.fail_replica(n, 0 if arg is None else arg)
                 elif kind == "preempt":
                     self.preempt_node(n, notice=arg)
+                elif kind == "slow":
+                    self.slow_node(n, arg)
                 else:
                     self.recover_node(n)
         for node in self.nodes:
@@ -946,7 +1053,7 @@ class ElasticClusterFrontend:
             self._dispatch(node)
             for eng in list(node.live) + list(node.draining):
                 node.credit[id(eng)] = node.credit.get(id(eng), 0.0) + \
-                    eng.speed
+                    eng.speed * node.slow
                 n_sub = int(node.credit[id(eng)])
                 node.credit[id(eng)] -= n_sub
                 if n_sub <= 0:
@@ -1210,6 +1317,14 @@ class ElasticClusterFrontend:
             "cell_staleness": np.zeros(1, np.float32),
             "cell_risk": np.zeros(1, np.float32),
             "shed": 0.0,
+            # hierarchical-control view (PR 10): a single frontend has no
+            # global plane above it and no lease unless the hierarchy set
+            # one — identically zero here; MultiCellBackend overrides with
+            # real plane-staleness / lease-utilization / local-action
+            # counts. Key presence is constant (same contract as above).
+            "plane_staleness": 0.0,
+            "lease_util": np.zeros(1, np.float32),
+            "local_actions": 0.0,
             **self._tier_metrics(finished_now),
         }
 

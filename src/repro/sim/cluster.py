@@ -131,24 +131,70 @@ class ClusterSim:
         # replicas). Tracked separately so scale_to can refuse to provision
         # onto them without changing the ordinary-failure dynamics.
         self._preempt_down = np.zeros(self.cfg.num_nodes, bool)
+        # deterministic straggler overlay (slow@t:nI:xF): multiplies into
+        # capacity alongside the stochastic episode state, and survives
+        # _advance_failures recomputing state.slow from slow_left each tick
+        self._forced_slow = np.ones(self.cfg.num_nodes, np.float32)
+        self._lease: Optional[tuple] = None   # (min, max) total replicas
 
     # ------------------------------------------------------------ dynamics
     def capacity(self) -> np.ndarray:
         s = self.state
         return (s.active * self.unit_capacity * self.node_speed * s.up *
-                s.slow).astype(np.float32)
+                s.slow * self._forced_slow).astype(np.float32)
+
+    def set_lease(self, min_replicas: int, max_replicas: int) -> None:
+        """Bound future ``scale_to`` calls to a capacity lease on the cell's
+        TOTAL in-flight replica count (fluid mirror of
+        ``ElasticClusterFrontend.set_lease``)."""
+        lo, hi = int(min_replicas), int(max_replicas)
+        if lo < 0 or hi < lo:
+            raise ValueError(f"bad lease [{min_replicas}, {max_replicas}]")
+        self._lease = (lo, hi)
+
+    def clear_lease(self) -> None:
+        self._lease = None
+
+    @property
+    def lease(self):
+        return self._lease
 
     def scale_to(self, target: np.ndarray):
         """Apply an autoscaler plan: scale-ups go through the provisioning
-        pipeline (cold start); scale-downs are immediate."""
+        pipeline (cold start); scale-downs are immediate. A capacity lease
+        (``set_lease``) clamps the cell total first."""
         s = self.state
         target = np.asarray(target, np.int32)
         in_flight = s.active + s.pending.sum(axis=1)
-        add = np.maximum(target - in_flight, 0)
         # never provision onto a node under a preemption notice or already
         # preempted away (ordinary failed nodes still accept adds: they
         # come back with their replicas after repair)
         doomed = (s.notice_left >= 0) | self._preempt_down
+        if self._lease is not None:
+            lo, hi = self._lease
+            # adds on doomed nodes are suppressed below, so their effective
+            # target never exceeds what they already hold
+            eff = np.where(doomed, np.minimum(target, in_flight),
+                           target).astype(np.int64)
+            total = int(eff.sum())
+            sched = np.nonzero(~doomed)[0]
+            while total > hi and sched.size:
+                cand = [i for i in sched if eff[i] > 0]
+                if not cand:
+                    break
+                i = max(cand, key=lambda j: (eff[j], -j))
+                eff[i] -= 1
+                total -= 1
+            while total < lo and sched.size:
+                cand = [i for i in sched
+                        if eff[i] < self.cfg.max_replicas_per_node]
+                if not cand:
+                    break
+                i = min(cand, key=lambda j: (eff[j], j))
+                eff[i] += 1
+                total += 1
+            target = eff.astype(np.int32)
+        add = np.maximum(target - in_flight, 0)
         add = np.where(doomed, 0, add)
         if add.any():
             s.pending[:, -1] += add
@@ -205,6 +251,22 @@ class ClusterSim:
         s.up[i] = 1.0
         s.down_left[i] = 0
 
+    def slow_node(self, i: int, factor: int):
+        """Deterministic straggler injection (``slow@t:nI:xF``), fluid
+        mirror of ``ElasticClusterFrontend.slow_node``: node ``i``'s
+        capacity multiplies by 1/``factor`` until cleared with
+        ``factor == 1``. Lives in a separate overlay so the stochastic
+        straggler episodes (``straggler_prob``) keep their own dynamics."""
+        self._check_node(i)
+        if factor is None or not isinstance(factor, (int, np.integer)):
+            raise ValueError(
+                f"slow factor must be an int >= 1, got {factor!r}")
+        if factor < 1:
+            raise ValueError(f"slow factor must be >= 1, got {factor}")
+        if self._preempt_down[i]:
+            raise ValueError(f"node n{i} is down (preempted); nothing to slow")
+        self._forced_slow[i] = 1.0 / int(factor)
+
     def _preempt_finalize(self, i: int):
         s = self.state
         s.retry_pool += float(s.queue[i])
@@ -250,12 +312,14 @@ class ClusterSim:
     def _advance_chaos(self):
         if self.chaos is not None:
             for kind, i, arg in self.chaos.pop(self.tick_count + 1):
-                if kind not in ("preempt", "fail", "recover"):
-                    continue          # cell-kind events belong to the router
+                if kind not in ("preempt", "fail", "recover", "slow"):
+                    continue     # cell/plane-kind events belong to the router
                 if kind == "preempt":
                     self.preempt_node(i, notice=arg)
                 elif kind == "recover":
                     self.recover_node(i)
+                elif kind == "slow":
+                    self.slow_node(i, arg)
                 else:                 # "fail": whole node, ordinary repair
                     self._check_node(i)
                     s = self.state
@@ -351,6 +415,10 @@ class ClusterSim:
             "cell_staleness": np.zeros(1, np.float32),
             "cell_risk": np.zeros(1, np.float32),
             "shed": 0.0,
+            # hierarchical-control view (PR 10): zeros for the same reason
+            "plane_staleness": 0.0,
+            "lease_util": np.zeros(1, np.float32),
+            "local_actions": 0.0,
         }
         if self.tier_queue is not None:
             m.update(self._tier_tick(

@@ -179,6 +179,10 @@ def test_degraded_mode_keys_always_on(setup):
         assert md["cell_staleness"].tolist() == [0.0]
         assert md["cell_risk"].tolist() == [0.0]
         assert md["shed"] == 0.0
+        # PR 10 hierarchy keys: same zeros contract
+        assert md["plane_staleness"] == 0.0
+        assert md["lease_util"].tolist() == [0.0]
+        assert md["local_actions"] == 0.0
     fe.run_until_drained()
 
 
